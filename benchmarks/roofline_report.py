@@ -1,0 +1,44 @@
+"""Roofline summary — reads the dry-run artifacts (launch/dryrun.py --all)
+and emits one record per (arch x shape) single-pod cell with the three terms
+and the bottleneck. This is the §Roofline data path."""
+import json
+import os
+
+from repro.core.characterization import Record
+
+ARTIFACTS = os.path.join(os.path.dirname(__file__), "artifacts",
+                         "dryrun.jsonl")
+
+
+def run():
+    out = []
+    if not os.path.exists(ARTIFACTS):
+        out.append(Record(name="roofline/missing", us_per_call=0.0,
+                          derived={"hint": "run python -m repro.launch.dryrun --all"}))
+        return out
+    best = {}
+    for line in open(ARTIFACTS):
+        try:
+            r = json.loads(line)
+        except json.JSONDecodeError:
+            continue
+        if not r.get("ok") or r.get("mesh") != "single":
+            continue
+        if "roofline" not in r:
+            continue
+        best[(r["arch"], r["shape"])] = r
+    for (arch, shape), r in sorted(best.items()):
+        roof = r["roofline"]
+        out.append(Record(
+            name=f"roofline/{arch}/{shape}",
+            us_per_call=roof["step_s"] * 1e6,
+            derived={"compute_s": round(roof["compute_s"], 5),
+                     "memory_s": round(roof["memory_s"], 5),
+                     "collective_s": round(roof["collective_s"], 5),
+                     "bottleneck": roof["bottleneck"],
+                     "roofline_fraction": round(roof["roofline_fraction"], 4),
+                     "useful_flops_ratio":
+                         round(roof["useful_flops_ratio"], 4),
+                     "mem_GiB": round(
+                         r["memory"]["per_device_total"] / 2 ** 30, 2)}))
+    return out

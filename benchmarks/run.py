@@ -1,0 +1,55 @@
+"""Run every benchmark (one per paper table/figure) and print
+``name,us_per_call,derived`` CSV. ``--only fig2`` filters."""
+import argparse
+import importlib
+import sys
+import time
+
+MODULES = [
+    "fig2_occupancy",
+    "fig3_shape",
+    "table3_tile_latency",
+    "fig4_concurrency",
+    "fig5_fairness",
+    "fig6_contention",
+    "fig8_latency_dist",
+    "fig9_imbalance",
+    "fig10_sparsity_overhead",
+    "fig11_sparsity_speedup",
+    "fig12_sparsity_sweep",
+    "fig13_sparsity_contention",
+    "fig14_transformer",
+    "fig15_concurrent_fp8",
+    "fig16_mixed_precision",
+    "roofline_report",
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="substring filter on module names")
+    args = ap.parse_args()
+
+    print("name,us_per_call,derived")
+    failures = 0
+    for name in MODULES:
+        if args.only and args.only not in name:
+            continue
+        t0 = time.time()
+        try:
+            mod = importlib.import_module(f"benchmarks.{name}")
+            for rec in mod.run():
+                print(rec.csv())
+            print(f"# {name}: ok in {time.time() - t0:.1f}s",
+                  file=sys.stderr)
+        except Exception as e:  # noqa: BLE001 — report and continue
+            failures += 1
+            print(f"{name}/ERROR,0.0,error={type(e).__name__}:{e}")
+            print(f"# {name}: FAILED {e}", file=sys.stderr)
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,16 @@
+"""Table 3 — dependency-chained per-tile-shape latency.
+
+Paper methodology: chain each matmul's output into the next so the
+measurement isolates single-issue latency, not pipelined throughput. The
+paper's MFMA tile shapes (16x16x32 etc.) map to MXU-granularity block
+shapes; the signature finding — larger tiles pay a latency premium and the
+"preferred" shape is precision-dependent — reproduces as block-shape
+sensitivity."""
+from repro.core.characterization import latency_probe
+
+
+def run():
+    return latency_probe(
+        tile_shapes=((128, 128, 128), (256, 256, 128), (128, 128, 256),
+                     (256, 256, 256)),
+        precisions=("fp32", "bf16", "fp8"), chain=8, iters=3)

@@ -1,0 +1,37 @@
+"""Run the paper's execution-centric characterization suite (§5–§7
+methodology) and print the derived guidance — the microbenchmark workflow
+an operator would run on a new TPU slice.
+
+  PYTHONPATH=src python examples/characterize.py
+"""
+from repro.core import characterization as ch
+
+
+def main():
+    print("== Fig 2: occupancy scaling (normalized to per-precision best) ==")
+    occ = ch.occupancy_sweep(tile_counts=(1, 2, 4, 8), tile_m=128,
+                             k=256, n=256, iters=3)
+    for r in occ:
+        print(" ", r.csv())
+    th = ch.occupancy_threshold(occ)
+    print("90% thresholds (tiles):", th)
+    fp8_needs_more = th.get("fp8", 0) >= th.get("bf16", 0)
+    print(f"paper-claim check — FP8 needs >= bf16 parallelism to saturate: "
+          f"{fp8_needs_more}")
+
+    print("\n== Fig 3: shape sensitivity ==")
+    for r in ch.shape_sweep(ratios=(0.25, 1.0, 4.0), iters=3):
+        print(" ", r.csv())
+
+    print("\n== Table 3: chained tile latency ==")
+    for r in ch.latency_probe(tile_shapes=((128, 128, 128), (256, 256, 128)),
+                              chain=8, iters=3):
+        print(" ", r.csv())
+
+    print("\n== Fig 6-8: contention ==")
+    for r in ch.contention_sweep(stream_counts=(1, 2, 4), iters=2):
+        print(" ", r.csv())
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,44 @@
+"""Quickstart: build a model from the zoo, run FP8 forward + one train step.
+
+  PYTHONPATH=src python examples/quickstart.py
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_reduced
+from repro.models import forward, init_params
+from repro.models.layers import RuntimeCfg
+from repro.optim import adamw
+from repro.runtime import train_loop as tl
+
+
+def main():
+    # 1. pick an architecture (any of the 10 assigned ids works) and a
+    #    technique: FP8 matmuls with f32 accumulation (paper §5)
+    cfg = dataclasses.replace(get_reduced("llama3-8b"), precision="fp8")
+    rt = RuntimeCfg(chunk_q=64, chunk_kv=64, ssm_chunk=32)
+
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 64), 0,
+                              cfg.vocab_size)
+
+    # 2. forward
+    logits, _ = jax.jit(lambda p, t: forward(p, t, cfg, rt))(params, toks)
+    print("logits:", logits.shape, "finite:",
+          bool(jnp.isfinite(logits[..., :cfg.vocab_size]).all()))
+
+    # 3. one training step (AdamW + f32 master weights)
+    opt_cfg = adamw.AdamWConfig(total_steps=100)
+    state = tl.init_state(params, opt_cfg)
+    step = jax.jit(tl.make_train_step(cfg, opt_cfg, rt))
+    labels = jax.random.randint(jax.random.PRNGKey(2), (2, 64), 0,
+                                cfg.vocab_size)
+    state, metrics = step(state, {"inputs": toks, "labels": labels})
+    print("loss:", float(metrics["loss"]), "grad_norm:",
+          float(metrics["grad_norm"]))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,47 @@
+"""End-to-end driver: train a ~100M-param llama-family model for a few
+hundred steps with FP8 matmuls, checkpointing, and straggler monitoring.
+
+  PYTHONPATH=src python examples/train_fp8.py [--steps 200]
+
+(This wraps the production launcher — launch/train.py — with a ~100M
+config; on a TPU pod the identical launcher trains the full configs.)
+"""
+import argparse
+import dataclasses
+import sys
+
+from repro.configs.base import ArchConfig
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--checkpoint-dir", default="/tmp/repro_fp8_ckpt")
+    args = ap.parse_args()
+
+    # ~100M params: 12L d=512 llama-style
+    cfg = ArchConfig(
+        name="llama-100m-fp8", family="dense", num_layers=12, d_model=512,
+        d_ff=2048, vocab_size=32000, num_heads=8, num_kv_heads=4,
+        head_dim=64, precision="fp8", attn_strategy="head_tp")
+    print(f"[example] {cfg.name}: {cfg.param_count()/1e6:.1f}M params, "
+          f"precision={cfg.precision}")
+
+    import repro.configs as configs
+    configs.ARCHS[cfg.name] = cfg
+    configs.REDUCED[cfg.name] = cfg
+
+    from repro.launch.train import build_argparser, run_once
+    targs = build_argparser().parse_args([
+        "--arch", cfg.name, "--steps", str(args.steps),
+        "--batch", str(args.batch), "--seq", str(args.seq),
+        "--checkpoint-dir", args.checkpoint_dir,
+        "--checkpoint-every", "50", "--log-every", "10",
+    ])
+    return run_once(targs)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

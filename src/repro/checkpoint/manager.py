@@ -1,0 +1,175 @@
+"""Checkpointing: atomic, asynchronous, elastically re-shardable.
+
+Layout per step:
+  <dir>/step_<n>.tmp/          — written first
+      meta.json                — step, data cursor, pytree structure
+      arr_<i>.npy              — one file per leaf (numpy, host-gathered)
+  <dir>/step_<n>/              — atomic rename once fully written
+
+Restore re-lays-out every leaf onto the *target* mesh/shardings
+(``device_put`` with the new NamedSharding), so a checkpoint written from a
+512-chip run restores onto 256 chips and vice versa — elastic scaling.
+Saves run on a background thread (training never blocks on disk); the
+manager keeps the last ``keep`` checkpoints.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+import time
+from typing import Any, Dict, List, Optional
+
+import jax
+import ml_dtypes
+import numpy as np
+
+
+def _flatten(tree: Any):
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    return leaves, treedef
+
+
+# numpy can't round-trip ml_dtypes (bfloat16, fp8) through save/load casts —
+# store them as raw byte views plus a dtype tag in meta.json.
+_BYTE_VIEW = {1: np.uint8, 2: np.uint16, 4: np.uint32, 8: np.uint64}
+
+
+_ML_DTYPES = {"bfloat16", "float8_e4m3fn", "float8_e5m2", "float8_e4m3",
+              "float8_e4m3fnuz", "float8_e5m2fnuz", "float8_e4m3b11_fnuz",
+              "int4", "uint4", "float4_e2m1fn", "float8_e8m0fnu"}
+
+
+def _to_savable(a: np.ndarray):
+    if a.dtype.name in _ML_DTYPES:
+        return a.view(_BYTE_VIEW[a.dtype.itemsize]), a.dtype.name
+    return a, None
+
+
+def _from_saved(raw: np.ndarray, dtype_tag: Optional[str]):
+    if dtype_tag is None:
+        return raw
+    return raw.view(np.dtype(getattr(ml_dtypes, dtype_tag)))
+
+
+class CheckpointManager:
+    def __init__(self, directory: str, keep: int = 3):
+        self.dir = directory
+        self.keep = keep
+        os.makedirs(directory, exist_ok=True)
+        self._thread: Optional[threading.Thread] = None
+        self._error: Optional[BaseException] = None
+
+    # ------------------------------------------------------------------
+    def save(self, step: int, state: Any, extra: Optional[Dict] = None,
+             blocking: bool = False):
+        """Snapshot ``state`` at ``step``. Device arrays are fetched to host
+        synchronously (cheap vs. step time), disk IO happens on a thread."""
+        self.wait()                     # one in-flight save at a time
+        leaves, treedef = _flatten(state)
+        host_leaves = []
+        dtype_tags = []
+        for l in leaves:
+            a, tag = _to_savable(np.asarray(l))
+            host_leaves.append(a)
+            dtype_tags.append(tag)
+        meta = {
+            "step": int(step),
+            "n_leaves": len(host_leaves),
+            "dtype_tags": dtype_tags,
+            "treedef": str(treedef),
+            "extra": extra or {},
+            "time": time.time(),
+        }
+
+        def work():
+            try:
+                tmp = os.path.join(self.dir, f"step_{step}.tmp")
+                final = os.path.join(self.dir, f"step_{step}")
+                if os.path.exists(tmp):
+                    shutil.rmtree(tmp)
+                os.makedirs(tmp)
+                for i, a in enumerate(host_leaves):
+                    np.save(os.path.join(tmp, f"arr_{i}.npy"), a)
+                with open(os.path.join(tmp, "meta.json"), "w") as f:
+                    json.dump(meta, f)
+                    f.flush()
+                    os.fsync(f.fileno())
+                if os.path.exists(final):
+                    shutil.rmtree(final)
+                os.rename(tmp, final)   # atomic commit
+                self._gc()
+            except BaseException as e:  # surfaced on next wait()
+                self._error = e
+
+        self._thread = threading.Thread(target=work, daemon=True)
+        self._thread.start()
+        if blocking:
+            self.wait()
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+        if self._error is not None:
+            e, self._error = self._error, None
+            raise e
+
+    def _gc(self):
+        steps = sorted(self.all_steps())
+        for s in steps[:-self.keep]:
+            shutil.rmtree(os.path.join(self.dir, f"step_{s}"),
+                          ignore_errors=True)
+
+    # ------------------------------------------------------------------
+    def all_steps(self) -> List[int]:
+        out = []
+        for name in os.listdir(self.dir):
+            if name.startswith("step_") and not name.endswith(".tmp"):
+                try:
+                    out.append(int(name.split("_")[1]))
+                except ValueError:
+                    pass
+        return sorted(out)
+
+    def latest_step(self) -> Optional[int]:
+        steps = self.all_steps()
+        return steps[-1] if steps else None
+
+    def restore(self, step: int, target: Any,
+                shardings: Optional[Any] = None):
+        """Load ``step`` into the structure of ``target`` (values or
+        ShapeDtypeStructs). With ``shardings`` (pytree of NamedSharding,
+        same structure), leaves are placed onto the *current* mesh — this is
+        the elastic-rescale path."""
+        path = os.path.join(self.dir, f"step_{step}")
+        with open(os.path.join(path, "meta.json")) as f:
+            meta = json.load(f)
+        leaves, treedef = _flatten(target)
+        if meta["n_leaves"] != len(leaves):
+            raise ValueError(
+                f"checkpoint has {meta['n_leaves']} leaves, target has "
+                f"{len(leaves)} — structure mismatch")
+        shard_leaves = (_flatten(shardings)[0] if shardings is not None
+                        else [None] * len(leaves))
+        tags = meta.get("dtype_tags") or [None] * len(leaves)
+        out = []
+        for i, (ref, shd) in enumerate(zip(leaves, shard_leaves)):
+            a = _from_saved(np.load(os.path.join(path, f"arr_{i}.npy")),
+                            tags[i])
+            if tuple(a.shape) != tuple(ref.shape):
+                raise ValueError(
+                    f"leaf {i}: checkpoint shape {a.shape} != target "
+                    f"{ref.shape}")
+            a = a.astype(ref.dtype)
+            out.append(jax.device_put(a, shd) if shd is not None
+                       else jax.device_put(a))
+        return jax.tree_util.tree_unflatten(treedef, out), meta["extra"]
+
+    def restore_latest(self, target: Any, shardings: Optional[Any] = None):
+        step = self.latest_step()
+        if step is None:
+            return None
+        state, extra = self.restore(step, target, shardings)
+        return step, state, extra

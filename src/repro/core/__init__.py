@@ -1,0 +1,9 @@
+# The paper's contribution as composable modules:
+#   fp8               — FP8 tensor-scaled matmul + delayed scaling (§5)
+#   sparsity          — 2:4 prune/pack + packed matmul (§7)
+#   concurrency       — stream scheduling + fairness/overlap metrics (§6)
+#   characterization  — the microbenchmark methodology itself (§4)
+# (Submodules are imported lazily by callers to keep import costs low and
+# avoid cycles; `from repro.core import fp8` etc.)
+
+__all__ = ["fp8", "sparsity", "concurrency", "characterization"]

@@ -1,0 +1,223 @@
+"""Execution-centric microbenchmark engine (paper §4–§7 methodology).
+
+Each sweep isolates one execution behavior with minimal kernels, warmup,
+repetition, and controlled scaling — the paper's methodology table (§4.2)
+reproduced as a library. Wall-time numbers measured in this container are
+CPU-XLA times (the harness is the deliverable; TPU-target numbers come from
+the dry-run roofline) — every record carries enough metadata to re-run on a
+TPU unchanged.
+
+Sweeps:
+  occupancy_sweep   — Fig 2: throughput vs grid parallelism per precision
+  shape_sweep       — Fig 3: throughput vs aspect ratio at fixed FLOPs
+  latency_probe     — Table 3: dependency-chained per-tile-shape latency
+  contention_sweep  — Fig 6–8: per-stream dilation vs stream count/size
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import concurrency as cc
+
+PRECISIONS: Dict[str, Any] = {
+    "fp8": jnp.float8_e4m3fn,
+    "bf16": jnp.bfloat16,
+    "fp16": jnp.float16,
+    "fp32": jnp.float32,
+}
+
+
+@dataclasses.dataclass
+class Record:
+    name: str
+    us_per_call: float
+    derived: Dict[str, Any]
+
+    def csv(self) -> str:
+        extra = ";".join(f"{k}={v}" for k, v in self.derived.items())
+        return f"{self.name},{self.us_per_call:.2f},{extra}"
+
+
+def _time_fn(fn, *args, iters: int = 5, warmup: int = 2) -> float:
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters
+
+
+def _matmul_fn(dtype):
+    def f(a, b):
+        return jax.lax.dot_general(
+            a, b, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+    return jax.jit(f)
+
+
+def _mk(shape, dtype, key=0):
+    x = jax.random.normal(jax.random.PRNGKey(key), shape, jnp.float32)
+    return (x * 4).astype(dtype) if dtype == jnp.float8_e4m3fn \
+        else x.astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Fig 2 — occupancy (grid parallelism) sweep
+# ---------------------------------------------------------------------------
+
+def occupancy_sweep(tile_counts: Sequence[int] = (1, 2, 4, 8, 16, 32),
+                    tile_m: int = 128, k: int = 256, n: int = 256,
+                    precisions: Sequence[str] = ("fp32", "bf16", "fp8"),
+                    iters: int = 5) -> List[Record]:
+    """Throughput vs #tiles: M = tiles × tile_m at fixed (K, N).
+
+    TPU adaptation of "active wavefronts": each 128-row M tile is one unit
+    of grid parallelism for the MXU. Throughput is normalized per precision
+    to its own best (exposes the occupancy *threshold*, the paper's Fig 2
+    signature, independent of absolute hardware peak).
+    """
+    out: List[Record] = []
+    for prec in precisions:
+        dtype = PRECISIONS[prec]
+        raw: List[Tuple[int, float]] = []
+        for t in tile_counts:
+            m = t * tile_m
+            a, b = _mk((m, k), dtype), _mk((k, n), dtype, 1)
+            dt = _time_fn(_matmul_fn(dtype), a, b, iters=iters)
+            flops = 2.0 * m * k * n
+            raw.append((t, flops / dt))
+        best = max(r[1] for r in raw)
+        for t, gf in raw:
+            out.append(Record(
+                name=f"occupancy/{prec}/tiles={t}",
+                us_per_call=2.0 * t * tile_m * k * n / gf * 1e6,
+                derived={"gflops": round(gf / 1e9, 2),
+                         "norm_to_best": round(gf / best, 4),
+                         "tiles": t, "precision": prec}))
+    return out
+
+
+def occupancy_threshold(records: List[Record], frac: float = 0.9
+                        ) -> Dict[str, int]:
+    """Smallest tile count reaching ``frac`` of best throughput, per
+    precision — the paper's '256+ wavefronts' statistic."""
+    by_prec: Dict[str, List[Tuple[int, float]]] = {}
+    for r in records:
+        p = r.derived["precision"]
+        by_prec.setdefault(p, []).append(
+            (r.derived["tiles"], r.derived["norm_to_best"]))
+    out = {}
+    for p, pts in by_prec.items():
+        pts.sort()
+        out[p] = next((t for t, v in pts if v >= frac), pts[-1][0])
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Fig 3 — aspect-ratio (shape) sweep at fixed total work
+# ---------------------------------------------------------------------------
+
+def shape_sweep(total_mn: int = 512 * 512, k: int = 256,
+                ratios: Sequence[float] = (0.25, 0.5, 1.0, 2.0, 4.0),
+                precisions: Sequence[str] = ("fp32", "bf16", "fp8"),
+                iters: int = 5) -> List[Record]:
+    """Fixed M·N (total work), vary M/N. 128-alignment preserved."""
+    out: List[Record] = []
+    for prec in precisions:
+        dtype = PRECISIONS[prec]
+        for r in ratios:
+            m = int(round((total_mn * r) ** 0.5 / 128)) * 128
+            m = max(m, 128)
+            n = max(total_mn // m // 128 * 128, 128)
+            a, b = _mk((m, k), dtype), _mk((k, n), dtype, 1)
+            dt = _time_fn(_matmul_fn(dtype), a, b, iters=iters)
+            gf = 2.0 * m * k * n / dt / 1e9
+            out.append(Record(
+                name=f"shape/{prec}/ratio={r}",
+                us_per_call=dt * 1e6,
+                derived={"gflops": round(gf, 2), "m": m, "n": n,
+                         "ratio": r, "precision": prec}))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Table 3 — dependency-chained tile latency
+# ---------------------------------------------------------------------------
+
+def latency_probe(tile_shapes: Sequence[Tuple[int, int, int]] = (
+        (128, 128, 128), (256, 256, 128), (128, 128, 256),
+        (256, 256, 256), (512, 512, 128)),
+        precisions: Sequence[str] = ("fp32", "bf16", "fp8"),
+        chain: int = 16, iters: int = 5) -> List[Record]:
+    """Chained matmuls (output feeds the next input) isolate per-tile-shape
+    issue latency, the paper's Table-3 methodology at MXU granularity."""
+    out: List[Record] = []
+    for prec in precisions:
+        dtype = PRECISIONS[prec]
+        for (m, n, k) in tile_shapes:
+
+            def chained(a, b):
+                x = a
+                for _ in range(chain):
+                    y = jax.lax.dot_general(
+                        x, b, (((1,), (0,)), ((), ())),
+                        preferred_element_type=jnp.float32)
+                    # renormalize + recast: keeps the chain stable and the
+                    # dependency real
+                    x = (y / jnp.float32(k)).astype(dtype)[:, :k]
+                return x
+
+            a = _mk((m, k), dtype)
+            b = _mk((k, max(n, k)), dtype, 1)
+            dt = _time_fn(jax.jit(chained), a, b, iters=iters)
+            out.append(Record(
+                name=f"latency/{prec}/{m}x{n}x{k}",
+                us_per_call=dt / chain * 1e6,
+                derived={"per_tile_us": round(dt / chain * 1e6, 2),
+                         "tile": f"{m}x{n}x{k}", "precision": prec}))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Fig 6–8 — contention sweep (stream count × working-set size)
+# ---------------------------------------------------------------------------
+
+def contention_sweep(sizes: Dict[str, int] = None,
+                     stream_counts: Sequence[int] = (1, 2, 4),
+                     iters: int = 3) -> List[Record]:
+    """Per-stream dilation under concurrency for thin/medium/thick kernels.
+
+    The paper reads L2-miss counters; without hardware counters the
+    *dilation* (concurrent time / isolated time) is the observable the
+    paper's Fig 8 reports, and the thin/medium/thick contrast carries the
+    same signature (bigger working sets → more contention).
+    """
+    sizes = sizes or {"thin": 128, "medium": 256, "thick": 512}
+    out: List[Record] = []
+    for label, s in sizes.items():
+        dtype = jnp.float32
+        fn = _matmul_fn(dtype)
+        a, b = _mk((s, s), dtype), _mk((s, s), dtype, 1)
+        iso = _time_fn(fn, a, b, iters=iters)
+        for ns in stream_counts:
+            def mk(i):
+                ai = _mk((s, s), dtype, key=i)
+                return lambda: fn(ai, b)
+            rep = cc.characterize_streams(mk, ns, mode="async")
+            dilation = (np.mean(rep.per_stream_s) / iso) if iso else 0.0
+            out.append(Record(
+                name=f"contention/{label}/streams={ns}",
+                us_per_call=float(np.mean(rep.per_stream_s)) * 1e6,
+                derived={"dilation": round(float(dilation), 3),
+                         "fairness": round(rep.fairness, 4),
+                         "cv": round(rep.cv, 4),
+                         "overlap_eff": round(rep.overlap_efficiency, 4),
+                         "size": s, "streams": ns}))
+    return out

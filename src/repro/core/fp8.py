@@ -1,0 +1,222 @@
+"""FP8 tensor-scaled matmul with delayed scaling (paper §5, §8.3).
+
+Implements the OCP OFP8 formats the paper exercises on MI300A's MFMA units
+(E4M3 "fp8" and E5M2 "bf8"), adapted to the TPU MXU contract:
+
+* FP8 × FP8 operands with FP32 accumulation (``preferred_element_type``),
+  mirroring ``V_MFMA_F32_..._FP8_FP8``.
+* Per-tensor scaling with **delayed scaling**: the scale for step *t* is
+  derived from a rolling amax history of the previous ``history`` steps
+  (FP8-LM / Transformer-Engine recipe), so quantization is a static, cheap
+  multiply at step time and the amax reduction happens off the critical path.
+* A :class:`Fp8State` pytree threads per-tensor amax histories through the
+  training step and is checkpointed with the model.
+
+On TPU v5e the MXU upconverts FP8 inputs; on v6e+ the MXU consumes FP8
+natively. Either way HBM traffic for weights/activations halves vs bf16 —
+that (not the FLOP rate) is what moves the roofline for the memory-bound
+cells (see EXPERIMENTS.md §Roofline).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+E4M3 = jnp.float8_e4m3fn
+E5M2 = jnp.float8_e5m2
+
+# Max representable magnitudes (OCP OFP8).
+E4M3_MAX = 448.0
+E5M2_MAX = 57344.0
+
+# Keep a safety margin so stochastic spikes don't saturate (TE default 0).
+DEFAULT_MARGIN = 0.0
+
+
+def fp8_max(dtype) -> float:
+    if dtype == E4M3:
+        return E4M3_MAX
+    if dtype == E5M2:
+        return E5M2_MAX
+    raise ValueError(f"not an fp8 dtype: {dtype}")
+
+
+# ---------------------------------------------------------------------------
+# Scaling state
+# ---------------------------------------------------------------------------
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class TensorScale:
+    """Delayed-scaling state for one logical tensor."""
+    amax_history: jax.Array        # (history,) f32, rolling
+    scale: jax.Array               # () f32 — quantization scale for *this* step
+
+    @staticmethod
+    def init(history: int = 16) -> "TensorScale":
+        return TensorScale(
+            amax_history=jnp.zeros((history,), jnp.float32),
+            scale=jnp.ones((), jnp.float32),
+        )
+
+
+def update_scale(ts: TensorScale, new_amax: jax.Array,
+                 dtype=E4M3, margin: float = DEFAULT_MARGIN) -> TensorScale:
+    """Roll the amax history and derive next step's scale (delayed scaling)."""
+    hist = jnp.concatenate([new_amax[None].astype(jnp.float32),
+                            ts.amax_history[:-1]])
+    amax = jnp.max(hist)
+    fmax = fp8_max(dtype)
+    # scale maps |x| <= amax onto the fp8 range; guard amax==0.
+    scale = jnp.where(amax > 0, (fmax / (2.0 ** margin)) / amax, 1.0)
+    return TensorScale(amax_history=hist, scale=scale.astype(jnp.float32))
+
+
+def quantize(x: jax.Array, ts: TensorScale, dtype=E4M3) -> jax.Array:
+    """Quantize with the (delayed) scale; saturating cast."""
+    fmax = fp8_max(dtype)
+    scaled = jnp.clip(x.astype(jnp.float32) * ts.scale, -fmax, fmax)
+    return scaled.astype(dtype)
+
+
+def dequantize_scale(ts: TensorScale) -> jax.Array:
+    return 1.0 / ts.scale
+
+
+def current_amax(x: jax.Array) -> jax.Array:
+    return jnp.max(jnp.abs(x.astype(jnp.float32)))
+
+
+# ---------------------------------------------------------------------------
+# FP8 matmul primitive (jnp reference path; the Pallas kernel in
+# kernels/fp8_matmul.py is the TPU drop-in)
+# ---------------------------------------------------------------------------
+
+def fp8_dot(x_q: jax.Array, w_q: jax.Array,
+            x_inv_scale: jax.Array, w_inv_scale: jax.Array,
+            out_dtype=jnp.bfloat16) -> jax.Array:
+    """(…, K) fp8 × (K, N) fp8 → (…, N) with f32 accumulation, descaled."""
+    acc = jax.lax.dot_general(
+        x_q, w_q,
+        dimension_numbers=(((x_q.ndim - 1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    return (acc * (x_inv_scale * w_inv_scale)).astype(out_dtype)
+
+
+def _saturate_cast(x32: jax.Array, scale: jax.Array, dtype) -> jax.Array:
+    fmax = fp8_max(dtype)
+    return jnp.clip(x32 * scale, -fmax, fmax).astype(dtype)
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(4, 5))
+def fp8_matmul(x: jax.Array, w: jax.Array,
+               x_scale: jax.Array, w_scale: jax.Array,
+               fwd_dtype=E4M3, grad_dtype=E5M2) -> jax.Array:
+    """Differentiable tensor-scaled FP8 matmul.
+
+    ``x_scale``/``w_scale`` are scalar (delayed) quantization scales.
+    Forward operands use E4M3 (range-narrow, precise); gradients use E5M2
+    (range-wide), matching the paper's fp8/bf8 MFMA operand pairs and the
+    standard FP8 training recipe.
+    """
+    x_q = _saturate_cast(x.astype(jnp.float32), x_scale, fwd_dtype)
+    w_q = _saturate_cast(w.astype(jnp.float32), w_scale, fwd_dtype)
+    return fp8_dot(x_q, w_q, 1.0 / x_scale, 1.0 / w_scale, out_dtype=x.dtype)
+
+
+def _fp8_matmul_fwd(x, w, x_scale, w_scale, fwd_dtype, grad_dtype):
+    x_q = _saturate_cast(x.astype(jnp.float32), x_scale, fwd_dtype)
+    w_q = _saturate_cast(w.astype(jnp.float32), w_scale, fwd_dtype)
+    out = fp8_dot(x_q, w_q, 1.0 / x_scale, 1.0 / w_scale, out_dtype=x.dtype)
+    return out, (x_q, w_q, x_scale, w_scale)
+
+
+def _fp8_matmul_bwd(fwd_dtype, grad_dtype, res, g):
+    x_q, w_q, x_s, w_s = res
+    # Gradient quantization: dynamic (current-tensor) scaling in E5M2.
+    g32 = g.astype(jnp.float32)
+    g_amax = jnp.maximum(jnp.max(jnp.abs(g32)), 1e-12)
+    g_scale = fp8_max(grad_dtype) / g_amax
+    g_q = _saturate_cast(g32, g_scale, grad_dtype)
+    # dx = g @ w^T   (fp8 × fp8, f32 acc)
+    dx = jax.lax.dot_general(
+        g_q, w_q, (((g.ndim - 1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    dx = dx / (g_scale * w_s)
+    # dw = x^T @ g  — contract all leading dims of x with those of g.
+    lead = tuple(range(g.ndim - 1))
+    dw = jax.lax.dot_general(
+        x_q, g_q, ((lead, lead), ((), ())),
+        preferred_element_type=jnp.float32)
+    dw = dw / (g_scale * x_s)
+    return (dx.astype(g.dtype), dw.astype(jnp.float32),
+            jnp.zeros_like(x_s), jnp.zeros_like(w_s))
+
+
+fp8_matmul.defvjp(_fp8_matmul_fwd, _fp8_matmul_bwd)
+
+
+# ---------------------------------------------------------------------------
+# Module-level: an FP8 linear layer with threaded scaling state
+# ---------------------------------------------------------------------------
+
+def fp8_linear(x: jax.Array, w: jax.Array, state: Dict[str, TensorScale],
+               name: str, history: int = 16,
+               collect: Optional[Dict[str, jax.Array]] = None) -> jax.Array:
+    """Linear layer in FP8 with delayed scaling.
+
+    ``state[name + '/x']`` and ``state[name + '/w']`` are :class:`TensorScale`
+    entries. When ``collect`` is given, current amaxes are recorded so the
+    train step can produce the next-step state via :func:`fold_amaxes`.
+    """
+    xs = state[f"{name}/x"]
+    ws = state[f"{name}/w"]
+    out = fp8_matmul(x, w, xs.scale, ws.scale)
+    if collect is not None:
+        collect[f"{name}/x"] = current_amax(x)
+        collect[f"{name}/w"] = current_amax(w)
+    return out
+
+
+def init_fp8_state(names, history: int = 16) -> Dict[str, TensorScale]:
+    state: Dict[str, TensorScale] = {}
+    for n in names:
+        state[f"{n}/x"] = TensorScale.init(history)
+        state[f"{n}/w"] = TensorScale.init(history)
+    return state
+
+
+def fold_amaxes(state: Dict[str, TensorScale],
+                amaxes: Dict[str, jax.Array]) -> Dict[str, TensorScale]:
+    """Produce next-step scaling state from this step's observed amaxes."""
+    out = dict(state)
+    for k, amax in amaxes.items():
+        out[k] = update_scale(state[k], amax)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Simple (stateless) dynamic-scaling quantized matmul — used by serving
+# paths and benchmarks where no state threading is wanted.
+# ---------------------------------------------------------------------------
+
+def dynamic_fp8_matmul(x: jax.Array, w: jax.Array, dtype=E4M3,
+                       out_dtype=jnp.bfloat16) -> jax.Array:
+    fmax = fp8_max(dtype)
+    xa = jnp.maximum(jnp.max(jnp.abs(x.astype(jnp.float32))), 1e-12)
+    wa = jnp.maximum(jnp.max(jnp.abs(w.astype(jnp.float32))), 1e-12)
+    xs, wsc = fmax / xa, fmax / wa
+    x_q = (x.astype(jnp.float32) * xs).astype(dtype)
+    w_q = (w.astype(jnp.float32) * wsc).astype(dtype)
+    return fp8_dot(x_q, w_q, 1.0 / xs, 1.0 / wsc, out_dtype=out_dtype)
+
+
+def quantize_weight_static(w: jax.Array, dtype=E4M3) -> Tuple[jax.Array, jax.Array]:
+    """Offline weight quantization for serving: returns (w_q, inv_scale)."""
+    wa = jnp.maximum(jnp.max(jnp.abs(w.astype(jnp.float32))), 1e-12)
+    s = fp8_max(dtype) / wa
+    return (w.astype(jnp.float32) * s).astype(dtype), (1.0 / s).astype(jnp.float32)

@@ -1,0 +1,180 @@
+"""2:4 structured sparsity (paper §7), adapted to TPU.
+
+The paper characterizes CDNA3's sparse-MFMA path: 2 of every 4 consecutive
+elements are zero, hardware skips the zeros (theoretical 2× FLOPs), but the
+realized benefit on MI300A is *context-dependent* — break-even in isolation
+(constant rocSPARSE overhead), 1.3× under concurrency.
+
+TPU has **no sparse MXU**. The TPU-native adaptation (DESIGN.md §2):
+
+* ``prune_24`` — magnitude-based 2:4 pruning along the contraction (K) dim;
+  numerics identical to the paper's pattern.
+* ``pack_24 / unpack_24`` — compressed representation: values ``(K/2, N)``
+  plus 2-bit indices packed 4-per-byte ``(K/8, N)``. For fp8 values this is
+  0.3125× the HBM bytes of a *bf16 dense* weight (0.625× of fp8 dense).
+* ``sparse24_matmul_ref`` — decompress-then-dense-matmul oracle. The Pallas
+  kernel (kernels/sparse24_matmul.py) performs the decompress in VMEM so HBM
+  only ever sees packed bytes: FLOPs unchanged, weight bandwidth halved —
+  a *memory-roofline* optimization, which is exactly the regime (decode,
+  small batch) where TPU LLM serving is bandwidth-bound.
+* ``prune_block24 / block24_matmul_ref`` — beyond-paper variant: 2:4 at the
+  granularity of K-blocks (2 of every 4 consecutive 128-wide K-blocks are
+  zero), which lets the Pallas kernel *skip MXU tiles* for a real 2× FLOP
+  reduction. This is the "custom kernels could achieve optimal speedup"
+  direction the paper points at (§9.1).
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+# ---------------------------------------------------------------------------
+# 2:4 pruning (element granularity, along K = axis 0 of a (K, N) weight)
+# ---------------------------------------------------------------------------
+
+def prune_24(w: jax.Array) -> jax.Array:
+    """Magnitude-prune to 2:4 along axis 0. ``w``: (K, N), K % 4 == 0.
+
+    Keeps the 2 largest-magnitude elements of every contiguous group of 4.
+    Deterministic tie-break toward lower index (matches cuSPARSELt/rocSPARSE
+    conventions closely enough for numerics tests).
+    """
+    K, N = w.shape
+    assert K % 4 == 0, f"K={K} must be divisible by 4"
+    g = w.reshape(K // 4, 4, N)
+    mag = jnp.abs(g)
+    # rank within each group of 4; keep top-2. argsort twice gives ranks.
+    order = jnp.argsort(-mag, axis=1, stable=True)
+    ranks = jnp.argsort(order, axis=1, stable=True)
+    keep = ranks < 2
+    return (g * keep).reshape(K, N).astype(w.dtype)
+
+
+def check_24(w: jax.Array) -> jax.Array:
+    """True iff every group of 4 along axis 0 has <= 2 nonzeros."""
+    K, N = w.shape
+    nnz = (w.reshape(K // 4, 4, N) != 0).sum(axis=1)
+    return jnp.all(nnz <= 2)
+
+
+# ---------------------------------------------------------------------------
+# Packing: values (K/2, N) + 2-bit indices packed 4/byte (K/8, N)
+# ---------------------------------------------------------------------------
+
+def pack_24(w24: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Compress a 2:4 weight. Returns (values (K/2, N), meta (K/8, N) uint8).
+
+    Each group of 4 rows contributes exactly 2 values; their in-group
+    positions (2 bits each) for 2 consecutive groups are packed into one
+    byte: ``meta = p0 | p1<<2 | p2<<4 | p3<<6`` where (p0,p1) index group
+    2g and (p2,p3) group 2g+1.
+
+    Groups with fewer than 2 nonzeros are padded with index slots holding
+    zero values (sound: contributes 0 to the matmul).
+    """
+    K, N = w24.shape
+    assert K % 8 == 0, f"K={K} must be divisible by 8 for byte packing"
+    g = w24.reshape(K // 4, 4, N)
+    nz = (g != 0)
+    # For each group: indices of the (up to) 2 nonzero slots, padded by the
+    # smallest zero slots. Build a sort key: nonzero first (by position),
+    # then zeros (by position).
+    pos = jnp.arange(4, dtype=jnp.int32)[None, :, None]
+    key = jnp.where(nz, pos, pos + 4)        # nonzeros sort before zeros
+    order = jnp.argsort(key, axis=1, stable=True)   # (G, 4, N)
+    idx = order[:, :2, :].astype(jnp.uint8)          # (G, 2, N) positions
+    vals = jnp.take_along_axis(g, order[:, :2, :].astype(jnp.int32), axis=1)
+    values = vals.reshape(K // 2, N).astype(w24.dtype)
+    # pack 4 2-bit indices (2 groups) per byte
+    idx2 = idx.reshape(K // 8, 4, N).astype(jnp.uint8)
+    meta = (idx2[:, 0] | (idx2[:, 1] << 2) | (idx2[:, 2] << 4)
+            | (idx2[:, 3] << 6)).astype(jnp.uint8)
+    return values, meta
+
+
+def unpack_meta(meta: jax.Array) -> jax.Array:
+    """(K/8, N) uint8 -> (K/2, N) int32 in-group positions (0..3)."""
+    K8, N = meta.shape
+    p0 = meta & 0x3
+    p1 = (meta >> 2) & 0x3
+    p2 = (meta >> 4) & 0x3
+    p3 = (meta >> 6) & 0x3
+    return jnp.stack([p0, p1, p2, p3], axis=1).reshape(K8 * 4, N).astype(jnp.int32)
+
+
+def unpack_24(values: jax.Array, meta: jax.Array) -> jax.Array:
+    """Decompress packed 2:4 back to dense (K, N)."""
+    K2, N = values.shape
+    K = K2 * 2
+    idx = unpack_meta(meta)                       # (K/2, N) in 0..3
+    gvals = values.reshape(K // 4, 2, N)
+    gidx = idx.reshape(K // 4, 2, N)
+    # scatter into (G, 4, N) via one-hot (vectorized; no gather/scatter op,
+    # mirrors what the Pallas kernel does in VMEM)
+    onehot = (gidx[:, :, None, :] == jnp.arange(4, dtype=jnp.int32)[None, None, :, None])
+    dense = jnp.sum(gvals[:, :, None, :].astype(jnp.float32) * onehot, axis=1)
+    return dense.reshape(K, N).astype(values.dtype)
+
+
+def sparse24_matmul_ref(x: jax.Array, values: jax.Array, meta: jax.Array,
+                        out_dtype=jnp.bfloat16) -> jax.Array:
+    """Oracle: decompress then dense matmul (f32 accumulation)."""
+    w = unpack_24(values, meta)
+    acc = jax.lax.dot_general(
+        x, w, (((x.ndim - 1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    return acc.astype(out_dtype)
+
+
+# ---------------------------------------------------------------------------
+# Beyond-paper: block-2:4 (tile-skipping) variant
+# ---------------------------------------------------------------------------
+
+def prune_block24(w: jax.Array, block: int = 128) -> Tuple[jax.Array, jax.Array]:
+    """Prune 2 of every 4 consecutive K-blocks (by Frobenius mass).
+
+    Returns (w_pruned dense (K,N), keep_mask (K/block,) bool). Unlike element
+    2:4, a whole 128-wide K-block of zeros lets the MXU skip the tile.
+    """
+    K, N = w.shape
+    assert K % (4 * block) == 0, f"K={K} must divide 4*block={4*block}"
+    nb = K // block
+    blocks = w.reshape(nb, block, N)
+    mass = jnp.sum(jnp.abs(blocks.astype(jnp.float32)), axis=(1, 2))
+    g = mass.reshape(nb // 4, 4)
+    order = jnp.argsort(-g, axis=1, stable=True)
+    ranks = jnp.argsort(order, axis=1, stable=True)
+    keep = (ranks < 2).reshape(nb)
+    wp = (blocks * keep[:, None, None]).reshape(K, N).astype(w.dtype)
+    return wp, keep
+
+
+def block24_matmul_ref(x: jax.Array, w_pruned: jax.Array, keep: jax.Array,
+                       block: int = 128, out_dtype=jnp.bfloat16) -> jax.Array:
+    """Oracle for the tile-skipping kernel: gather kept blocks, half-K matmul."""
+    K, N = w_pruned.shape
+    nb = K // block
+    kept_idx = jnp.nonzero(keep, size=nb // 2)[0]          # static size: exactly half
+    wb = w_pruned.reshape(nb, block, N)[kept_idx]           # (nb/2, block, N)
+    xb = x.reshape(*x.shape[:-1], nb, block)
+    xb = jnp.take(xb, kept_idx, axis=-2)                    # (..., nb/2, block)
+    acc = jnp.einsum("...gk,gkn->...n", xb.astype(jnp.float32),
+                     wb.astype(jnp.float32))
+    return acc.astype(out_dtype)
+
+
+# ---------------------------------------------------------------------------
+# Byte accounting (used by the roofline + benchmarks)
+# ---------------------------------------------------------------------------
+
+def packed_bytes(K: int, N: int, value_dtype=jnp.float8_e4m3fn) -> int:
+    vbytes = jnp.dtype(value_dtype).itemsize
+    return (K // 2) * N * vbytes + (K // 8) * N          # values + meta
+
+
+def dense_bytes(K: int, N: int, dtype=jnp.bfloat16) -> int:
+    return K * N * jnp.dtype(dtype).itemsize

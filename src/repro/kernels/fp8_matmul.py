@@ -1,0 +1,79 @@
+"""Pallas TPU kernel: blocked FP8×FP8→FP32 GEMM (paper §5 on the MXU).
+
+MI300A's ``V_MFMA_F32_16x16x32_FP8_FP8`` operates on wavefront-level
+16×16×32 tiles; the TPU analogue is a 128×128 MXU pass over VMEM-resident
+blocks. The kernel is a canonical three-level blocked matmul:
+
+  grid = (M/bm, N/bn, K/bk)   — K innermost so the f32 accumulator stays
+                                 in a VMEM scratch across K steps
+  BlockSpecs map (i, j, k) to (bm, bk) / (bk, bn) / (bm, bn) tiles.
+
+Block shapes default to (256, 512, 256) — multiples of the 128-wide MXU
+systolic dims; the paper's Table-3 "tile-shape latency" experiment becomes a
+block-shape sweep over this kernel (benchmarks/table3_tile_latency.py).
+
+VMEM budget at defaults: x 256·512 (fp8) + w 512·256 (fp8) + acc 256·256·4
+≈ 0.5 MiB — deep double-buffering headroom within ~16 MiB/core VMEM.
+
+Per-tensor scales multiply the f32 accumulator *outside* the kernel (they
+are scalars; fusing them in would force SMEM plumbing for no bandwidth win).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+DEFAULT_BM = 256
+DEFAULT_BN = 256
+DEFAULT_BK = 512
+
+
+def _fp8_matmul_kernel(x_ref, w_ref, o_ref, acc_ref, *, k_steps: int):
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # MXU pass: fp8 operands, f32 accumulation. On v5e the MXU upconverts;
+    # on v6e+ this is a native FP8 pass — the contract is identical.
+    x = x_ref[...]
+    w = w_ref[...]
+    acc_ref[...] += jax.lax.dot_general(
+        x, w, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+    @pl.when(pl.program_id(2) == k_steps - 1)
+    def _store():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk", "out_dtype",
+                                             "interpret"))
+def fp8_matmul_pallas(x_q: jax.Array, w_q: jax.Array, *,
+                      bm: int = DEFAULT_BM, bn: int = DEFAULT_BN,
+                      bk: int = DEFAULT_BK, out_dtype=jnp.float32,
+                      interpret: bool = False) -> jax.Array:
+    """x_q: (M, K) fp8; w_q: (K, N) fp8 → (M, N) f32 (undescaled)."""
+    M, K = x_q.shape
+    K2, N = w_q.shape
+    assert K == K2, (x_q.shape, w_q.shape)
+    bm, bn, bk = min(bm, M), min(bn, N), min(bk, K)
+    assert M % bm == 0 and N % bn == 0 and K % bk == 0, (M, N, K, bm, bn, bk)
+    k_steps = K // bk
+
+    return pl.pallas_call(
+        functools.partial(_fp8_matmul_kernel, k_steps=k_steps),
+        grid=(M // bm, N // bn, k_steps),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),
+            pl.BlockSpec((bk, bn), lambda i, j, k: (k, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((M, N), out_dtype),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        interpret=interpret,
+    )(x_q, w_q)

@@ -1,0 +1,52 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose ground truth)."""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import sparsity as sp
+
+
+def fp8_matmul_ref(x_q: jax.Array, w_q: jax.Array,
+                   out_dtype=jnp.float32) -> jax.Array:
+    """fp8 (M,K) × fp8 (K,N) → f32, exact f32 accumulation."""
+    return jax.lax.dot_general(
+        x_q.astype(jnp.float32), w_q.astype(jnp.float32),
+        (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32).astype(out_dtype)
+
+
+def sparse24_matmul_ref(x: jax.Array, values: jax.Array, meta: jax.Array,
+                        out_dtype=jnp.bfloat16) -> jax.Array:
+    return sp.sparse24_matmul_ref(x, values, meta, out_dtype=out_dtype)
+
+
+def block24_matmul_ref(x: jax.Array, w_packed: jax.Array, kept_idx,
+                       block: int = 128, out_dtype=jnp.bfloat16) -> jax.Array:
+    """x (M, K_dense) × packed (K_dense/2, N), kept dense-K block list."""
+    M, K = x.shape
+    cols = jnp.concatenate([
+        jnp.arange(i * block, (i + 1) * block) for i in kept_idx])
+    xk = jnp.take(x, cols, axis=1).astype(jnp.float32)
+    return (xk @ w_packed.astype(jnp.float32)).astype(out_dtype)
+
+
+def flash_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                        causal: bool = True) -> jax.Array:
+    """Naive full-softmax attention. q: (B,h,Sq,hd); k/v: (B,kvh,Skv,hd)."""
+    B, h, sq, hd = q.shape
+    _, kvh, skv, _ = k.shape
+    if kvh != h:
+        rep = h // kvh
+        k = jnp.repeat(k, rep, axis=1)
+        v = jnp.repeat(v, rep, axis=1)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) / math.sqrt(hd)
+    if causal:
+        mask = jnp.tril(jnp.ones((sq, skv), bool), k=skv - sq)
+        s = jnp.where(mask, s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhqk,bhkd->bhqd", p, v.astype(jnp.float32))
+    return out.astype(q.dtype)

@@ -1,0 +1,150 @@
+"""Pallas TPU kernel: packed 2:4-sparse GEMM (paper §7, TPU-native form).
+
+MI300A's sparse MFMA skips the pruned half of the FLOPs. TPU has no sparse
+MXU, so the win is re-derived from the memory hierarchy (DESIGN.md §2): the
+weight streams from HBM in *packed* form — values (K/2, N) + 2-bit metadata
+(K/8, N) ≈ 0.3125× the bytes of a dense bf16 weight — and is decompressed
+**in VMEM by the VPU** while the MXU consumes the previous block (the grid
+pipeline double-buffers). FLOPs are unchanged; HBM weight traffic halves+.
+That converts directly to speedup exactly where LLM serving is
+weight-bandwidth-bound (decode) — the TPU version of the paper's
+"context-dependent sparsity benefit".
+
+Decompression per block (pure VPU ops, no gather):
+  meta byte -> four 2-bit positions -> one-hot (2, 4) per group -> sum.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+DEFAULT_BM = 128
+DEFAULT_BN = 256
+DEFAULT_BK = 256          # K-block of the *dense* K dimension
+
+
+def _decompress_block(vals, meta, bk: int, bn: int):
+    """vals: (bk/2, bn); meta: (bk/8, bn) uint8 -> dense (bk, bn) f32."""
+    # unpack 4 × 2-bit positions per byte -> (bk/2, bn) int32 in 0..3
+    p0 = (meta & 0x3).astype(jnp.int32)
+    p1 = ((meta >> 2) & 0x3).astype(jnp.int32)
+    p2 = ((meta >> 4) & 0x3).astype(jnp.int32)
+    p3 = ((meta >> 6) & 0x3).astype(jnp.int32)
+    # interleave to (bk/2, bn): groups are consecutive pairs
+    idx = jnp.stack([p0, p1, p2, p3], axis=1).reshape(bk // 2, bn)
+    v = vals.astype(jnp.float32).reshape(bk // 4, 2, bn)
+    ix = idx.reshape(bk // 4, 2, bn)
+    # scatter two values into their 4-slot group via one-hot compare
+    slots = jax.lax.broadcasted_iota(jnp.int32, (bk // 4, 2, 4, bn), 2)
+    onehot = (ix[:, :, None, :] == slots).astype(jnp.float32)
+    dense = jnp.sum(v[:, :, None, :] * onehot, axis=1)        # (bk/4, 4, bn)
+    return dense.reshape(bk, bn)
+
+
+def _sparse24_kernel(x_ref, v_ref, m_ref, o_ref, acc_ref, *,
+                     k_steps: int, bk: int, bn: int):
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    w_block = _decompress_block(v_ref[...], m_ref[...], bk, bn)  # VPU
+    x = x_ref[...].astype(jnp.float32)
+    acc_ref[...] += jax.lax.dot_general(                          # MXU
+        x, w_block, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+    @pl.when(pl.program_id(2) == k_steps - 1)
+    def _store():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk", "out_dtype",
+                                             "interpret"))
+def sparse24_matmul_pallas(x: jax.Array, values: jax.Array, meta: jax.Array,
+                           *, bm: int = DEFAULT_BM, bn: int = DEFAULT_BN,
+                           bk: int = DEFAULT_BK, out_dtype=jnp.bfloat16,
+                           interpret: bool = False) -> jax.Array:
+    """x: (M, K); values: (K/2, N); meta: (K/8, N) uint8 → (M, N)."""
+    M, K = x.shape
+    K2, N = values.shape
+    assert K == 2 * K2, (x.shape, values.shape)
+    assert meta.shape == (K // 8, N), meta.shape
+    bm, bn, bk = min(bm, M), min(bn, N), min(bk, K)
+    assert M % bm == 0 and N % bn == 0 and K % bk == 0
+    assert bk % 8 == 0
+    k_steps = K // bk
+
+    return pl.pallas_call(
+        functools.partial(_sparse24_kernel, k_steps=k_steps, bk=bk, bn=bn),
+        grid=(M // bm, N // bn, k_steps),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),
+            pl.BlockSpec((bk // 2, bn), lambda i, j, k: (k, j)),
+            pl.BlockSpec((bk // 8, bn), lambda i, j, k: (k, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((M, N), out_dtype),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        interpret=interpret,
+    )(x, values, meta)
+
+
+# ---------------------------------------------------------------------------
+# Beyond-paper: block-2:4 tile-skipping kernel — real FLOP reduction.
+# The kept K-block indices are static (weights are pruned offline), so the
+# grid simply iterates the kept half of K; BlockSpec index_map uses a
+# compile-time lookup table.
+# ---------------------------------------------------------------------------
+
+def block24_matmul_pallas(x: jax.Array, w_packed: jax.Array,
+                          kept_idx: tuple, *, block: int = 128,
+                          bm: int = DEFAULT_BM, bn: int = DEFAULT_BN,
+                          out_dtype=jnp.bfloat16,
+                          interpret: bool = False) -> jax.Array:
+    """x: (M, K_dense); w_packed: (K_dense/2, N) — kept K-blocks concatenated.
+
+    ``kept_idx``: static tuple of kept dense-K block indices (len = K/2/block).
+    FLOPs: M·N·K/2 — an actual 2× reduction vs dense, unlike element 2:4.
+    """
+    M, K = x.shape
+    Kh, N = w_packed.shape
+    assert Kh == K // 2
+    assert len(kept_idx) == Kh // block
+    bm, bn = min(bm, M), min(bn, N)
+    assert M % bm == 0 and N % bn == 0 and Kh % block == 0
+    k_steps = Kh // block
+    kept = tuple(int(i) for i in kept_idx)
+
+    def kernel(x_ref, w_ref, o_ref, acc_ref):
+        @pl.when(pl.program_id(2) == 0)
+        def _init():
+            acc_ref[...] = jnp.zeros_like(acc_ref)
+        acc_ref[...] += jax.lax.dot_general(
+            x_ref[...].astype(jnp.float32), w_ref[...].astype(jnp.float32),
+            (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+        @pl.when(pl.program_id(2) == k_steps - 1)
+        def _store():
+            o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+    def x_index(i, j, k):
+        # jump to the kept dense-K block (static switch over k)
+        kd = jax.lax.switch(k, [lambda v=v: jnp.int32(v) for v in kept])
+        return (i, kd)
+
+    return pl.pallas_call(
+        kernel,
+        grid=(M // bm, N // bn, k_steps),
+        in_specs=[
+            pl.BlockSpec((bm, block), x_index),
+            pl.BlockSpec((block, bn), lambda i, j, k: (k, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((M, N), out_dtype),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        interpret=interpret,
+    )(x, w_packed)

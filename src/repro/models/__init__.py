@@ -1,0 +1,10 @@
+from repro.models.layers import RuntimeCfg, DEFAULT_RT, PackedWeight, dense
+from repro.models.transformer import (
+    forward, prefill, decode_step, init_params, params_shape, init_cache,
+    cache_shape,
+)
+
+__all__ = [
+    "RuntimeCfg", "DEFAULT_RT", "PackedWeight", "dense", "forward", "prefill",
+    "decode_step", "init_params", "params_shape", "init_cache", "cache_shape",
+]

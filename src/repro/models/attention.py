@@ -1,0 +1,230 @@
+"""Attention: chunked (flash-style) training/prefill path + decode path.
+
+The chunked implementation is the pure-jnp reference for the Pallas flash
+kernel (kernels/flash_attention.py) and is what the dry-run lowers: blocked
+online softmax, causal or sliding-window, GQA via KV broadcast. Fully-masked
+(q, kv) block pairs are *skipped at trace time* (python loop bounds), so the
+lowered HLO carries only the ~triangular FLOPs — this keeps the roofline
+honest and matches what the TPU kernel does.
+
+Memory: each block is wrapped in ``jax.checkpoint`` so AD saves only block
+inputs (O(S·d) residuals), the flash recompute strategy.
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models.layers import (
+    RuntimeCfg, DEFAULT_RT, apply_rope, dense, shard_tag)
+
+NEG_INF = -1e30
+
+
+def _expand_kv(k: jax.Array, num_heads: int) -> jax.Array:
+    """(B, S, kv, hd) -> (B, S, h, hd) by broadcast (GQA)."""
+    b, s, kv, hd = k.shape
+    if kv == num_heads:
+        return k
+    groups = num_heads // kv
+    k = jnp.broadcast_to(k[:, :, :, None, :], (b, s, kv, groups, hd))
+    return k.reshape(b, s, num_heads, hd)
+
+
+def _attn_block(q, k, v, qpos0, kpos0, *, causal, window, scale):
+    """One (q-chunk, kv-chunk) block: returns (scores_max, exp_sums, acc).
+
+    q: (B, cq, h, hd); k/v: (B, ck, h, hd). Online-softmax partials.
+    """
+    cq, ck = q.shape[1], k.shape[1]
+    s = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    qi = qpos0 + jnp.arange(cq)
+    ki = kpos0 + jnp.arange(ck)
+    mask = jnp.ones((cq, ck), bool)
+    if causal:
+        mask &= qi[:, None] >= ki[None, :]
+    if window:
+        mask &= (qi[:, None] - ki[None, :]) < window
+    s = jnp.where(mask[None, None], s, NEG_INF)
+    m = jnp.max(s, axis=-1)                                   # (B, h, cq)
+    p = jnp.exp(s - m[..., None])
+    # Fully-masked rows: m == NEG_INF -> p rows of exp(0)=1; zero them.
+    p = jnp.where((m > NEG_INF / 2)[..., None], p, 0.0)
+    l = jnp.sum(p, axis=-1)                                   # (B, h, cq)
+    acc = jnp.einsum("bhqk,bkhd->bhqd", p, v.astype(jnp.float32))
+    return m, l, acc
+
+
+def chunked_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                      causal: bool = True, window: int = 0,
+                      rt: RuntimeCfg = DEFAULT_RT,
+                      q_offset: int = 0) -> jax.Array:
+    """Blocked online-softmax attention.
+
+    q: (B, Sq, h, hd); k, v: (B, Skv, kv_heads, hd). Returns (B, Sq, h, hd).
+    ``q_offset`` is the absolute position of q[0] (prefill continuation).
+    """
+    b, sq, h, hd = q.shape
+    skv = k.shape[1]
+    k = _expand_kv(k, h)
+    v = _expand_kv(v, h)
+    scale = 1.0 / math.sqrt(hd)
+
+    cq = min(rt.chunk_q, sq)
+    ck = min(rt.chunk_kv, skv)
+    nq, nk = -(-sq // cq), -(-skv // ck)
+    assert sq % cq == 0 and skv % ck == 0, (sq, cq, skv, ck)
+
+    outs = []
+    for i in range(nq):
+        qi = jax.lax.slice_in_dim(q, i * cq, (i + 1) * cq, axis=1)
+        qpos0 = q_offset + i * cq
+        # kv block range that can contribute to this q chunk
+        j_hi = nk if not causal else min(nk, (qpos0 + cq + ck - 1) // ck)
+        j_lo = 0
+        if window:
+            j_lo = max(0, (qpos0 - window) // ck)
+        m = jnp.full((b, h, cq), NEG_INF, jnp.float32)
+        l = jnp.zeros((b, h, cq), jnp.float32)
+        acc = jnp.zeros((b, h, cq, hd), jnp.float32)
+
+        def combine(carry, bm, bl, bacc):
+            m, l, acc = carry
+            m_new = jnp.maximum(m, bm)
+            c1 = jnp.exp(m - m_new)
+            c2 = jnp.exp(bm - m_new)
+            l = l * c1 + bl * c2
+            acc = acc * c1[..., None] + bacc * c2[..., None]
+            return m_new, l, acc
+
+        if rt.static_loops:
+            # python loop: every block explicit in HLO — exact cost analysis
+            for j in range(j_lo, j_hi):
+                kj = jax.lax.slice_in_dim(k, j * ck, (j + 1) * ck, axis=1)
+                vj = jax.lax.slice_in_dim(v, j * ck, (j + 1) * ck, axis=1)
+                if j > j_lo:
+                    # sequence the blocks behind the softmax carry so
+                    # schedulers don't keep every block's scores live
+                    kj, vj, m = jax.lax.optimization_barrier((kj, vj, m))
+                if rt.remat_blocks:
+                    bm, bl, bacc = jax.checkpoint(
+                        lambda a, bk, bv, qp=qpos0, kp=j * ck: _attn_block(
+                            a, bk, bv, qp, kp, causal=causal, window=window,
+                            scale=scale))(qi, kj, vj)
+                else:
+                    bm, bl, bacc = _attn_block(qi, kj, vj, qpos0, j * ck,
+                                               causal=causal, window=window,
+                                               scale=scale)
+                m, l, acc = combine((m, l, acc), bm, bl, bacc)
+        else:
+            # lax.scan over kv blocks: one block body in HLO — bounded
+            # liveness (the memory-probe lowering; see launch/dryrun.py)
+            nb = j_hi - j_lo
+            ks = k[:, j_lo * ck:j_hi * ck].reshape(b, nb, ck, h, hd)
+            vs = v[:, j_lo * ck:j_hi * ck].reshape(b, nb, ck, h, hd)
+            ks = jnp.moveaxis(ks, 1, 0)
+            vs = jnp.moveaxis(vs, 1, 0)
+            jidx = jnp.arange(j_lo, j_hi)
+
+            def body(carry, inp):
+                kj, vj, j = inp
+                bm, bl, bacc = _attn_block(qi, kj, vj, qpos0, j * ck,
+                                           causal=causal, window=window,
+                                           scale=scale)
+                return combine(carry, bm, bl, bacc), None
+            if rt.remat_blocks:
+                body = jax.checkpoint(body)
+            (m, l, acc), _ = jax.lax.scan(body, (m, l, acc), (ks, vs, jidx))
+
+        out = acc / jnp.maximum(l, 1e-30)[..., None]          # (B, h, cq, hd)
+        outs.append(out.transpose(0, 2, 1, 3))                # (B, cq, h, hd)
+    return jnp.concatenate(outs, axis=1).astype(q.dtype)
+
+
+def decode_attention(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
+                     cache_len, *, window: int = 0) -> jax.Array:
+    """Single-token attention against a cache.
+
+    q: (B, 1, h, hd); caches: (B, Smax, kv, hd); ``cache_len`` scalar/array —
+    number of valid cache positions (the new token's k/v already written).
+    """
+    b, _, h, hd = q.shape
+    smax = k_cache.shape[1]
+    k = _expand_kv(k_cache, h)
+    v = _expand_kv(v_cache, h)
+    scale = 1.0 / math.sqrt(hd)
+    s = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale              # (B, h, 1, Smax)
+    pos = jnp.arange(smax)
+    valid = pos[None, :] < jnp.asarray(cache_len).reshape(-1, 1)
+    if window:
+        valid &= pos[None, :] >= (jnp.asarray(cache_len).reshape(-1, 1) - window)
+    s = jnp.where(valid[:, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhqk,bkhd->bqhd", p, v.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Full attention block (pre-norm residual), used by transformer.py
+# ---------------------------------------------------------------------------
+
+def attention_block(x: jax.Array, p: Dict[str, jax.Array], cfg: ArchConfig,
+                    rt: RuntimeCfg = DEFAULT_RT, *, window: int = 0,
+                    positions: Optional[jax.Array] = None,
+                    return_kv: bool = False):
+    """Projections + RoPE + chunked attention. x: (B, S, d)."""
+    b, s, _ = x.shape
+    h, kv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    if positions is None:
+        positions = jnp.arange(s)
+    q = dense(x, p["w_q"], cfg, rt, "q").reshape(b, s, h, hd)
+    k = dense(x, p["w_k"], cfg, rt, "k").reshape(b, s, kv, hd)
+    v = dense(x, p["w_v"], cfg, rt, "v").reshape(b, s, kv, hd)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    q = shard_tag(rt, q, "attn_q")
+    if rt.use_pallas and not window:
+        from repro.kernels import ops
+        o = ops.flash_attention(q, k, v, causal=True)
+    else:
+        o = chunked_attention(q, k, v, causal=True, window=window, rt=rt)
+    o = o.reshape(b, s, h * hd)
+    out = dense(o, p["w_o"], cfg, rt, "o")
+    if return_kv:
+        return out, (k, v)
+    return out
+
+
+def decode_attention_block(x: jax.Array, p: Dict[str, jax.Array],
+                           cfg: ArchConfig, cache: Tuple[jax.Array, jax.Array],
+                           pos, rt: RuntimeCfg = DEFAULT_RT, *,
+                           window: int = 0):
+    """One-token attention block with cache update.
+
+    x: (B, 1, d); cache: (k, v) each (B, Smax, kv, hd); pos: scalar int —
+    index to write the new token's k/v. Returns (out, new_cache).
+    """
+    b = x.shape[0]
+    h, kv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    k_cache, v_cache = cache
+    positions = jnp.full((1,), pos)
+    q = dense(x, p["w_q"], cfg, rt, "q").reshape(b, 1, h, hd)
+    k = dense(x, p["w_k"], cfg, rt, "k").reshape(b, 1, kv, hd)
+    v = dense(x, p["w_v"], cfg, rt, "v").reshape(b, 1, kv, hd)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    k_cache = jax.lax.dynamic_update_slice_in_dim(
+        k_cache, k.astype(k_cache.dtype), pos, axis=1)
+    v_cache = jax.lax.dynamic_update_slice_in_dim(
+        v_cache, v.astype(v_cache.dtype), pos, axis=1)
+    o = decode_attention(q, k_cache, v_cache, pos + 1, window=window)
+    o = o.reshape(b, 1, h * hd)
+    out = dense(o, p["w_o"], cfg, rt, "o")
+    return out, (k_cache, v_cache)

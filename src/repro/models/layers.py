@@ -1,0 +1,235 @@
+"""Shared building blocks: norms, RoPE, the precision-routed linear, MLP.
+
+The ``dense()`` primitive is the single place where the paper's two weight
+techniques plug into every architecture:
+
+* ``precision="fp8"``   → tensor-scaled FP8 matmul (core/fp8), FP32 accum.
+* ``sparsity_24=True``  → 2:4 magnitude pruning with straight-through
+  estimator in training; packed weights (``PackedWeight``) in serving.
+
+All other call sites are ordinary bf16 matmuls with f32 accumulation.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.core import fp8 as fp8lib
+from repro.core import sparsity as sp
+
+
+# ---------------------------------------------------------------------------
+# Runtime configuration (lowering/execution knobs, not architecture)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class RuntimeCfg:
+    """Execution knobs threaded through model forward functions."""
+    chunk_q: int = 1024
+    chunk_kv: int = 1024
+    static_loops: bool = True     # python loops (exact HLO cost) vs lax.scan
+    use_pallas: bool = False      # TPU kernels (validated in interpret mode)
+    param_dtype: Any = jnp.bfloat16
+    act_dtype: Any = jnp.bfloat16
+    ssm_chunk: int = 256
+    # static (python) ssm-chunk loops only up to this count — beyond it the
+    # trace/compile cost explodes; lax.scan takes over and the dry-run adds
+    # the per-chunk cost correction analytically (launch/dryrun.py).
+    max_static_chunks: int = 64
+    remat_blocks: bool = True     # jax.checkpoint around attention blocks
+    # XLA:CPU cannot execute batched bf16×bf16→f32 dots (DotThunk limit);
+    # True upcasts batched-dot operands to f32 for execution. The dry-run
+    # lowers with False so the roofline sees the TPU contract (bf16 operands,
+    # f32 accumulation in the MXU).
+    f32_batched_dots: bool = True
+    # Optional sharding-constraint hook: fn(tag, x) -> x (runtime/sharding.py
+    # wires with_sharding_constraint specs by tag; None = rely on GSPMD
+    # propagation from param/input shardings alone).
+    shard_fn: Any = None
+    # Beyond-paper (§Perf): gather/scatter MoE dispatch instead of the
+    # GShard one-hot einsum — removes the O(T·gs·k·d) dispatch matmul FLOPs
+    # (dominant for fine-grained-expert archs like granite).
+    moe_gather_dispatch: bool = False
+
+
+def shard_tag(rt: "RuntimeCfg", x, tag: str):
+    if rt.shard_fn is None:
+        return x
+    return rt.shard_fn(tag, x)
+
+
+DEFAULT_RT = RuntimeCfg()
+
+
+# ---------------------------------------------------------------------------
+# Packed 2:4 weight (serving)
+# ---------------------------------------------------------------------------
+
+class PackedWeight(NamedTuple):
+    """2:4-compressed linear weight: values (K/2, N) + meta (K/8, N) uint8."""
+    values: jax.Array
+    meta: jax.Array
+
+    @property
+    def k(self) -> int:
+        return self.values.shape[0] * 2
+
+    @property
+    def n(self) -> int:
+        return self.values.shape[1]
+
+
+def pack_weight(w: jax.Array) -> PackedWeight:
+    vals, meta = sp.pack_24(sp.prune_24(w))
+    return PackedWeight(vals, meta)
+
+
+# ---------------------------------------------------------------------------
+# The precision-routed linear
+# ---------------------------------------------------------------------------
+
+@jax.custom_vjp
+def _ste_prune24(w: jax.Array) -> jax.Array:
+    return sp.prune_24(w)
+
+
+def _ste_fwd(w):
+    return sp.prune_24(w), None
+
+
+def _ste_bwd(_, g):
+    return (g,)          # straight-through: gradient flows to all weights
+
+
+_ste_prune24.defvjp(_ste_fwd, _ste_bwd)
+
+
+def dense(x: jax.Array, w, cfg: ArchConfig, rt: RuntimeCfg = DEFAULT_RT,
+          name: str = "") -> jax.Array:
+    """``x @ w`` routed through the configured technique.
+
+    ``w`` is a dense (K, N) array or a :class:`PackedWeight` (serving).
+    """
+    if isinstance(w, PackedWeight):
+        if rt.use_pallas:
+            from repro.kernels import ops
+            return ops.sparse24_matmul(x, w.values, w.meta,
+                                       out_dtype=rt.act_dtype)
+        return sp.sparse24_matmul_ref(x, w.values, w.meta,
+                                      out_dtype=rt.act_dtype)
+
+    if cfg.sparsity_24 and w.ndim == 2 and w.shape[0] % 8 == 0:
+        w = _ste_prune24(w)
+
+    if cfg.precision == "fp8" and w.ndim == 2:
+        if rt.use_pallas:
+            from repro.kernels import ops
+            return ops.fp8_matmul_dynamic(x, w, out_dtype=rt.act_dtype)
+        return fp8lib.dynamic_fp8_matmul(x, w, out_dtype=rt.act_dtype)
+
+    acc = jax.lax.dot_general(
+        x, w, (((x.ndim - 1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    return acc.astype(rt.act_dtype)
+
+
+def batched_einsum(expr: str, a: jax.Array, b: jax.Array, rt: RuntimeCfg,
+                   out_dtype=None) -> jax.Array:
+    """Batched matmul with f32 accumulation, honoring rt.f32_batched_dots."""
+    out_dtype = out_dtype or rt.act_dtype
+    if rt.f32_batched_dots:
+        acc = jnp.einsum(expr, a.astype(jnp.float32), b.astype(jnp.float32))
+    else:
+        acc = jnp.einsum(expr, a, b, preferred_element_type=jnp.float32)
+    return acc.astype(out_dtype)
+
+
+# ---------------------------------------------------------------------------
+# Norms / RoPE / embeddings
+# ---------------------------------------------------------------------------
+
+def rms_norm(x: jax.Array, gamma: jax.Array, eps: float = 1e-5) -> jax.Array:
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    out = x32 * jax.lax.rsqrt(var + eps) * (1.0 + gamma.astype(jnp.float32))
+    return out.astype(x.dtype)
+
+
+def rope_frequencies(head_dim: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32)
+                            / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (..., S, h, hd); positions: (S,) or broadcastable."""
+    hd = x.shape[-1]
+    freqs = rope_frequencies(hd, theta)                       # (hd/2,)
+    angles = positions[..., :, None].astype(jnp.float32) * freqs  # (S, hd/2)
+    cos = jnp.cos(angles)[..., :, None, :]                    # (S, 1, hd/2)
+    sin = jnp.sin(angles)[..., :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def embed_tokens(tokens: jax.Array, table: jax.Array) -> jax.Array:
+    return jnp.take(table, tokens, axis=0)
+
+
+def lm_logits(h: jax.Array, head_w: jax.Array, vocab_size: int) -> jax.Array:
+    """Project to (padded) vocab; mask padding logits to -inf."""
+    logits = jax.lax.dot_general(
+        h, head_w, (((h.ndim - 1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    vp = head_w.shape[-1]
+    if vp != vocab_size:
+        mask = jnp.arange(vp) < vocab_size
+        logits = jnp.where(mask, logits, -1e30)
+    return logits
+
+
+# ---------------------------------------------------------------------------
+# SwiGLU MLP
+# ---------------------------------------------------------------------------
+
+def swiglu_mlp(x: jax.Array, p: Dict[str, jax.Array], cfg: ArchConfig,
+               rt: RuntimeCfg = DEFAULT_RT) -> jax.Array:
+    gate = dense(x, p["w_gate"], cfg, rt, "mlp_gate")
+    up = dense(x, p["w_up"], cfg, rt, "mlp_up")
+    h = jax.nn.silu(gate.astype(jnp.float32)).astype(x.dtype) * up
+    return dense(h, p["w_down"], cfg, rt, "mlp_down")
+
+
+# ---------------------------------------------------------------------------
+# Parameter initializers (real arrays; shape-only twins live in transformer.py)
+# ---------------------------------------------------------------------------
+
+def _init(key, shape, dtype, scale=None):
+    fan_in = shape[0] if len(shape) > 1 else shape[-1]
+    s = scale if scale is not None else fan_in ** -0.5
+    return (jax.random.normal(key, shape, jnp.float32) * s).astype(dtype)
+
+
+def init_mlp(key, cfg: ArchConfig, dtype, d_ff: Optional[int] = None):
+    d, f = cfg.d_model, d_ff or cfg.d_ff
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "w_gate": _init(k1, (d, f), dtype),
+        "w_up": _init(k2, (d, f), dtype),
+        "w_down": _init(k3, (f, d), dtype),
+    }
+
+
+def init_attn(key, cfg: ArchConfig, dtype):
+    d = cfg.d_model
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    return {
+        "w_q": _init(k1, (d, cfg.q_dim), dtype),
+        "w_k": _init(k2, (d, cfg.kv_dim), dtype),
+        "w_v": _init(k3, (d, cfg.kv_dim), dtype),
+        "w_o": _init(k4, (cfg.q_dim, d), dtype),
+    }

@@ -1,0 +1,211 @@
+"""Mamba2 (SSD) block — chunked parallel scan for training, O(1) decode.
+
+Simplified single-group SSD following the Mamba2 formulation:
+  h_t = exp(dt_t A) h_{t-1} + dt_t x_t B_tᵀ          (state: (nh, hp, N))
+  y_t = C_t h_t + D x_t
+
+Chunked algorithm (chunk length Lc): intra-chunk term is a masked quadratic
+attention-like product; inter-chunk term carries the state recurrence across
+chunks (python loop when ``rt.static_loops`` so the lowered HLO carries the
+true FLOPs; ``lax.scan`` otherwise).
+
+The projections route through ``dense()`` and therefore inherit the FP8 /
+2:4 techniques; the recurrence itself stays f32 (DESIGN.md §4: FP8 state
+accumulation diverges — documented arch-applicability limit).
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models.layers import RuntimeCfg, DEFAULT_RT, dense, _init
+
+
+def _conv1d_causal(x: jax.Array, w: jax.Array, state=None):
+    """Depthwise causal conv, width W. x: (B, S, C); w: (W, C).
+
+    With ``state`` (B, W-1, C) (decode), uses and returns updated state.
+    """
+    W = w.shape[0]
+    if state is None:
+        pad = jnp.zeros((x.shape[0], W - 1, x.shape[2]), x.dtype)
+        xp = jnp.concatenate([pad, x], axis=1)
+    else:
+        xp = jnp.concatenate([state.astype(x.dtype), x], axis=1)
+    out = sum(xp[:, i:i + x.shape[1], :] * w[i] for i in range(W))
+    new_state = xp[:, -(W - 1):, :] if W > 1 else None
+    return out, new_state
+
+
+def _ssd_chunk(xh, dt, dA_cumsum, B, C, h_prev):
+    """One chunk of SSD.
+
+    xh: (b, Lc, nh, hp)   — input heads
+    dt: (b, Lc, nh)       — discretization steps (post-softplus)
+    dA_cumsum: (b, Lc, nh) — cumulative sum of dt*A within the chunk
+    B, C: (b, Lc, N)
+    h_prev: (b, nh, hp, N)
+    Returns (y (b, Lc, nh, hp), h_next).
+    """
+    b, Lc, nh, hp = xh.shape
+    # decay from chunk start to t: exp(dA_cumsum[t])
+    decay_to_t = jnp.exp(dA_cumsum)                              # (b,Lc,nh)
+    # inter-chunk contribution: y_inter[t] = C_t · (h_prev · decay(start..t))
+    y_inter = jnp.einsum("bln,bhpn,blh->blhp", C, h_prev, decay_to_t)
+    # intra-chunk: L[t,s] = exp(dA_cumsum[t]-dA_cumsum[s]) for s<=t
+    seg = dA_cumsum[:, :, None, :] - dA_cumsum[:, None, :, :]    # (b,t,s,nh)
+    causal = jnp.tril(jnp.ones((Lc, Lc), bool))
+    L = jnp.where(causal[None, :, :, None], jnp.exp(seg), 0.0)
+    # scores[t,s] = C_t·B_s ; y_intra[t] = sum_s L[t,s]*scores[t,s]*dt_s*x_s
+    scores = jnp.einsum("bln,bmn->blm", C, B)                    # (b,t,s)
+    G = scores[:, :, :, None] * L                                # (b,t,s,nh)
+    y_intra = jnp.einsum("blsh,bsh,bshp->blhp", G, dt, xh)
+    # state update: h_next = h_prev*decay(chunk) + sum_s decay(s..end)*dt_s*x_s⊗B_s
+    total = dA_cumsum[:, -1:, :]                                 # (b,1,nh)
+    decay_from_s = jnp.exp(total - dA_cumsum)                    # (b,Lc,nh)
+    h_next = (h_prev * jnp.exp(total)[:, 0, :, None, None]
+              + jnp.einsum("blh,blh,blhp,bln->bhpn",
+                           decay_from_s, dt, xh, B))
+    return y_intra + y_inter, h_next
+
+
+def mamba2_block(x: jax.Array, p: Dict[str, jax.Array], cfg: ArchConfig,
+                 rt: RuntimeCfg = DEFAULT_RT) -> jax.Array:
+    """Full Mamba2 mixer. x: (B, S, d) -> (B, S, d)."""
+    out, _ = _mamba2_block_impl(x, p, cfg, rt)
+    return out
+
+
+def mamba2_block_with_state(x: jax.Array, p: Dict[str, jax.Array],
+                            cfg: ArchConfig, rt: RuntimeCfg = DEFAULT_RT):
+    """Prefill variant: returns (out, (ssm_state, conv_state))."""
+    return _mamba2_block_impl(x, p, cfg, rt)
+
+
+def _mamba2_block_impl(x: jax.Array, p: Dict[str, jax.Array], cfg: ArchConfig,
+                       rt: RuntimeCfg = DEFAULT_RT):
+    b, s, d = x.shape
+    di, N = cfg.ssm_d_inner, cfg.ssm_state
+    nh, hp = cfg.ssm_nheads, cfg.ssm_head_dim
+
+    z = dense(x, p["w_z"], cfg, rt, "ssm_z")
+    xr = dense(x, p["w_x"], cfg, rt, "ssm_x")
+    B_ = dense(x, p["w_B"], cfg, rt, "ssm_B")
+    C_ = dense(x, p["w_C"], cfg, rt, "ssm_C")
+    dt = dense(x, p["w_dt"], cfg, rt, "ssm_dt")
+    conv_in = jnp.concatenate([xr, B_, C_], -1)
+    final_conv_state = conv_in[:, -3:, :].astype(jnp.float32)
+    xbc, _ = _conv1d_causal(conv_in, p["conv_w"])
+    xbc = jax.nn.silu(xbc.astype(jnp.float32))
+    xr, B_, C_ = jnp.split(xbc, [di, di + N], axis=-1)
+
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))                 # (nh,)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])  # (B,S,nh)
+    dA = dt * A                                                  # (B,S,nh)
+
+    xh = xr.reshape(b, s, nh, hp)
+    Lc = min(rt.ssm_chunk, cfg.ssm_chunk, s)
+    assert s % Lc == 0, (s, Lc)
+    nchunks = s // Lc
+
+    def chunk_args(i):
+        sl = slice(i * Lc, (i + 1) * Lc)
+        dA_c = dA[:, sl]
+        return (xh[:, sl], dt[:, sl], jnp.cumsum(dA_c, axis=1),
+                B_[:, sl], C_[:, sl])
+
+    h = jnp.zeros((b, nh, hp, N), jnp.float32)
+    if rt.static_loops and nchunks <= rt.max_static_chunks:
+        ys = []
+        for i in range(nchunks):
+            xh_i, dt_i, cum_i, B_i, C_i = chunk_args(i)
+            if i:
+                # bound liveness: sequence chunk temporaries behind the
+                # state carry (see attention.py for rationale)
+                xh_i, dt_i, cum_i, B_i, C_i, h = jax.lax.optimization_barrier(
+                    (xh_i, dt_i, cum_i, B_i, C_i, h))
+            yi, h = _ssd_chunk(xh_i, dt_i, cum_i, B_i, C_i, h)
+            ys.append(yi)
+        y = jnp.concatenate(ys, axis=1)
+    else:
+        xh_c = xh.reshape(b, nchunks, Lc, nh, hp).transpose(1, 0, 2, 3, 4)
+        dt_c = dt.reshape(b, nchunks, Lc, nh).transpose(1, 0, 2, 3)
+        dA_c = dA.reshape(b, nchunks, Lc, nh).transpose(1, 0, 2, 3)
+        B_c = B_.reshape(b, nchunks, Lc, N).transpose(1, 0, 2, 3)
+        C_c = C_.reshape(b, nchunks, Lc, N).transpose(1, 0, 2, 3)
+
+        def body(h, args):
+            xh_i, dt_i, dA_i, B_i, C_i = args
+            yi, h = _ssd_chunk(xh_i, dt_i, jnp.cumsum(dA_i, axis=1), B_i, C_i, h)
+            return h, yi
+        # remat: recompute the O(Lc^2) intra-chunk temps in backward
+        body = jax.checkpoint(body)
+        h, ys = jax.lax.scan(body, h, (xh_c, dt_c, dA_c, B_c, C_c))
+        y = ys.transpose(1, 0, 2, 3, 4).reshape(b, s, nh, hp)
+
+    y = y + xh * p["D"].astype(jnp.float32)[None, None, :, None]
+    y = y.reshape(b, s, di)
+    y = y * jax.nn.silu(z.astype(jnp.float32))                   # gate
+    out = dense(y.astype(x.dtype), p["out_proj"], cfg, rt, "ssm_out")
+    return out, (h, final_conv_state)
+
+
+def mamba2_decode(x: jax.Array, p: Dict[str, jax.Array], cfg: ArchConfig,
+                  state: Tuple[jax.Array, jax.Array],
+                  rt: RuntimeCfg = DEFAULT_RT):
+    """Single-token step. x: (B, 1, d); state = (ssm (B,nh,hp,N) f32,
+    conv (B, 3, di+2N)). Returns (out, new_state)."""
+    b = x.shape[0]
+    di, N = cfg.ssm_d_inner, cfg.ssm_state
+    nh, hp = cfg.ssm_nheads, cfg.ssm_head_dim
+    h, conv_state = state
+
+    z = dense(x, p["w_z"], cfg, rt, "ssm_z")
+    xr = dense(x, p["w_x"], cfg, rt, "ssm_x")
+    B_ = dense(x, p["w_B"], cfg, rt, "ssm_B")
+    C_ = dense(x, p["w_C"], cfg, rt, "ssm_C")
+    dt = dense(x, p["w_dt"], cfg, rt, "ssm_dt")
+    xbc, conv_state = _conv1d_causal(
+        jnp.concatenate([xr, B_, C_], -1), p["conv_w"], state=conv_state)
+    xbc = jax.nn.silu(xbc.astype(jnp.float32))
+    xr, B_, C_ = jnp.split(xbc, [di, di + N], axis=-1)
+
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])[:, 0]  # (B,nh)
+    dA = jnp.exp(dt * A)                                               # (B,nh)
+    xh = xr.reshape(b, nh, hp)
+    Bv, Cv = B_[:, 0], C_[:, 0]                                        # (B,N)
+    h = h * dA[:, :, None, None] + jnp.einsum(
+        "bh,bhp,bn->bhpn", dt, xh, Bv)
+    y = jnp.einsum("bhpn,bn->bhp", h, Cv) + xh * p["D"].astype(jnp.float32)[None, :, None]
+    y = y.reshape(b, 1, di) * jax.nn.silu(z.astype(jnp.float32))
+    out = dense(y.astype(x.dtype), p["out_proj"], cfg, rt, "ssm_out")
+    return out, (h, conv_state)
+
+
+def init_mamba2(key, cfg: ArchConfig, dtype):
+    d, di, N, nh = cfg.d_model, cfg.ssm_d_inner, cfg.ssm_state, cfg.ssm_nheads
+    ks = jax.random.split(key, 7)
+    conv_dim = di + 2 * N
+    return {
+        "w_z": _init(ks[0], (d, di), dtype),
+        "w_x": _init(ks[1], (d, di), dtype),
+        "w_B": _init(ks[2], (d, N), dtype),
+        "w_C": _init(ks[3], (d, N), dtype),
+        "w_dt": _init(ks[4], (d, nh), dtype),
+        "conv_w": _init(ks[5], (4, conv_dim), jnp.float32, scale=0.5),
+        "A_log": jnp.zeros((nh,), jnp.float32),                 # A = -1
+        "dt_bias": jnp.full((nh,), -2.0, jnp.float32),
+        "D": jnp.ones((nh,), jnp.float32),
+        "out_proj": _init(ks[6], (di, d), dtype),
+    }
+
+
+def init_mamba2_state(batch: int, cfg: ArchConfig):
+    nh, hp, N = cfg.ssm_nheads, cfg.ssm_head_dim, cfg.ssm_state
+    conv_dim = cfg.ssm_d_inner + 2 * N
+    return (jnp.zeros((batch, nh, hp, N), jnp.float32),
+            jnp.zeros((batch, 3, conv_dim), jnp.float32))

@@ -1,0 +1,231 @@
+"""RWKV-6 (Finch) block — data-dependent decay linear attention.
+
+Per head (hd = head dim), per token t:
+  S_t = diag(w_t) S_{t-1} + k_tᵀ v_t           (state S: (hd_k, hd_v))
+  y_t = r_t (S_{t-1} + diag(u) k_tᵀ v_t)
+
+with data-dependent decay w_t = exp(-exp(ŵ_t)). Training uses a chunked
+formulation (quadratic within chunk + state across chunks) mirroring the
+reference CUDA kernel; decode is the O(1) recurrence.
+
+Sharding note (DESIGN.md §3.1): the recurrence is elementwise in the value
+feature dim, so the state/values shard on ``model`` along hd_v with zero
+per-step communication — 40 heads not dividing 16 is irrelevant.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models.layers import RuntimeCfg, DEFAULT_RT, dense, shard_tag, _init
+
+
+def _token_shift(x: jax.Array, prev: jax.Array = None) -> jax.Array:
+    """x_{t-1} stream; ``prev`` is (B, 1, d) carry for decode."""
+    if prev is None:
+        return jnp.pad(x, ((0, 0), (1, 0), (0, 0)))[:, :-1]
+    return prev
+
+
+def _wkv_chunk(r, k, v, w, u, S):
+    """One chunk of the wkv recurrence.
+
+    r,k,v,w: (b, Lc, nh, hd) — w is the per-step decay in (0,1].
+    u: (nh, hd) bonus. S: (b, nh, hd, hd) state (k-major, v-minor).
+    Returns (y (b, Lc, nh, hd), S_next).
+    """
+    b, Lc, nh, hd = r.shape
+    logw = jnp.log(jnp.maximum(w, 1e-30))                   # (b,Lc,nh,hd)
+    cum = jnp.cumsum(logw, axis=1)                          # decay start..t (incl t)
+    # inter-chunk: y_inter[t] = r_t · (decay(start..t-1) ⊙ S)
+    #   decay through steps 1..t-1 applied to S: exp(cum[t-1]); at t=0 -> I.
+    cum_prev = jnp.concatenate(
+        [jnp.zeros_like(cum[:, :1]), cum[:, :-1]], axis=1)  # (b,Lc,nh,hd)
+    r_dec = r * jnp.exp(cum_prev)                            # exponent <= 0: safe
+    y_inter = jnp.einsum("blhi,bhij->blhj", r_dec, S)
+    # intra-chunk: y_intra[t] = sum_{s<t} (r_t ⊙ exp(cum[t-1]-cum[s])) k_s v_s
+    #            + (r_t ⊙ u) k_t v_t
+    # A[t,s] = sum_i r_t,i k_s,i exp(cum_prev[t]-cum[s])_i  for s < t.
+    # Computed with the *pairwise* exponent (always <= 0 on causal pairs) —
+    # a factorized exp(cum_prev[t])·exp(-cum[s]) overflows f32 under strong
+    # decay, the pairwise difference cannot.
+    seg = cum_prev[:, :, None] - cum[:, None, :]             # (b,t,s,nh,hd)
+    causal_strict = jnp.tril(jnp.ones((Lc, Lc), bool), k=-1)
+    decay = jnp.where(causal_strict[None, :, :, None, None], jnp.exp(seg), 0.0)
+    A = jnp.einsum("blhi,bmhi,blmhi->blmh", r, k, decay)     # (b,t,s,nh)
+    y_intra = jnp.einsum("blmh,bmhj->blhj", A, v)
+    diag = jnp.einsum("blhi,blhi->blh", r * u[None, None], k)
+    y_intra = y_intra + diag[..., None] * v
+    # state: S_next = diag(decay whole chunk) S + sum_s diag(decay s+1..end) k_s v_s
+    total = cum[:, -1:]                                      # (b,1,nh,hd)
+    k_tail = k * jnp.exp(total - cum)
+    S_next = (S * jnp.exp(total)[:, 0, :, :, None]
+              + jnp.einsum("blhi,blhj->bhij", k_tail, v))
+    return y_intra + y_inter, S_next
+
+
+def rwkv6_block(x: jax.Array, p: Dict[str, jax.Array], cfg: ArchConfig,
+                rt: RuntimeCfg = DEFAULT_RT) -> jax.Array:
+    """Time-mix (wkv) sub-block. x: (B, S, d) -> (B, S, d)."""
+    out, _ = _rwkv6_block_impl(x, p, cfg, rt)
+    return out
+
+
+def rwkv6_block_with_state(x: jax.Array, p: Dict[str, jax.Array],
+                           cfg: ArchConfig, rt: RuntimeCfg = DEFAULT_RT):
+    """Prefill variant: returns (out, (S_final, prev_tm))."""
+    return _rwkv6_block_impl(x, p, cfg, rt)
+
+
+def _rwkv6_block_impl(x: jax.Array, p: Dict[str, jax.Array], cfg: ArchConfig,
+                      rt: RuntimeCfg = DEFAULT_RT):
+    b, s, d = x.shape
+    hd = cfg.ssm_head_dim
+    nh = d // hd
+
+    xs = _token_shift(x)
+    def mix(name):
+        return x + (xs - x) * p[f"mu_{name}"].astype(x.dtype)
+    r = dense(mix("r"), p["w_r"], cfg, rt, "rwkv_r").reshape(b, s, nh, hd)
+    k = dense(mix("k"), p["w_k"], cfg, rt, "rwkv_k").reshape(b, s, nh, hd)
+    v = dense(mix("v"), p["w_v"], cfg, rt, "rwkv_v").reshape(b, s, nh, hd)
+    v = shard_tag(rt, v, "rwkv_v")           # value-dim sharding: comm-free wkv
+    g = dense(mix("g"), p["w_g"], cfg, rt, "rwkv_g")
+    wlog = dense(mix("w"), p["w_w"], cfg, rt, "rwkv_w").reshape(b, s, nh, hd)
+    w = jnp.exp(-jnp.exp(wlog.astype(jnp.float32) + p["w_bias"]
+                         .reshape(nh, hd)))                   # (0,1)
+
+    r32, k32, v32 = (t.astype(jnp.float32) for t in (r, k, v))
+    u = p["u"].reshape(nh, hd).astype(jnp.float32)
+
+    Lc = min(rt.ssm_chunk, cfg.ssm_chunk, s)
+    assert s % Lc == 0, (s, Lc)
+    nchunks = s // Lc
+    S = jnp.zeros((b, nh, hd, hd), jnp.float32)
+    if rt.static_loops and nchunks <= rt.max_static_chunks:
+        ys = []
+        for i in range(nchunks):
+            sl = slice(i * Lc, (i + 1) * Lc)
+            ri, ki, vi, wi = r32[:, sl], k32[:, sl], v32[:, sl], w[:, sl]
+            if i:
+                # bound liveness: sequence chunk temporaries behind the
+                # state carry (see attention.py for rationale)
+                ri, ki, vi, wi, S = jax.lax.optimization_barrier(
+                    (ri, ki, vi, wi, S))
+            yi, S = _wkv_chunk(ri, ki, vi, wi, u, S)
+            ys.append(yi)
+        y = jnp.concatenate(ys, axis=1)
+    else:
+        def body(S, args):
+            ri, ki, vi, wi = args
+            yi, S = _wkv_chunk(ri, ki, vi, wi, u, S)
+            return S, yi
+        # remat: the pairwise-decay temp is O(Lc^2·d) per chunk — recompute
+        # it in backward instead of letting scan save one per chunk
+        body = jax.checkpoint(body)
+        split = lambda t: t.reshape(b, nchunks, Lc, nh, hd).transpose(1, 0, 2, 3, 4)
+        S, ys = jax.lax.scan(body, S, (split(r32), split(k32), split(v32), split(w)))
+        y = ys.transpose(1, 0, 2, 3, 4).reshape(b, s, nh, hd)
+
+    y = y.reshape(b, s, d)
+    # group-norm per head then output gate (SiLU(g))
+    yh = y.reshape(b, s, nh, hd)
+    mean = yh.mean(-1, keepdims=True)
+    var = yh.var(-1, keepdims=True)
+    yh = (yh - mean) * jax.lax.rsqrt(var + 64e-5)
+    y = (yh.reshape(b, s, d) * jax.nn.silu(g.astype(jnp.float32))).astype(x.dtype)
+    out = dense(y, p["w_o"], cfg, rt, "rwkv_o")
+    return out, (S, x[:, -1:, :])
+
+
+def rwkv6_channel_mix(x: jax.Array, p: Dict[str, jax.Array], cfg: ArchConfig,
+                      rt: RuntimeCfg = DEFAULT_RT) -> jax.Array:
+    xs = _token_shift(x)
+    xk = x + (xs - x) * p["mu_ck"].astype(x.dtype)
+    xr = x + (xs - x) * p["mu_cr"].astype(x.dtype)
+    rgate = jax.nn.sigmoid(
+        dense(xr, p["w_cr"], cfg, rt, "rwkv_cr").astype(jnp.float32))
+    h = dense(xk, p["w_ck"], cfg, rt, "rwkv_ck")
+    h = jnp.square(jax.nn.relu(h.astype(jnp.float32))).astype(x.dtype)
+    return (rgate * dense(h, p["w_cv"], cfg, rt, "rwkv_cv")
+            .astype(jnp.float32)).astype(x.dtype)
+
+
+def rwkv6_channel_mix_decode(x: jax.Array, p: Dict[str, jax.Array],
+                             cfg: ArchConfig, prev: jax.Array,
+                             rt: RuntimeCfg = DEFAULT_RT):
+    """One-token channel-mix; ``prev`` is the previous token's input (B,1,d).
+    Returns (out, new_prev)."""
+    xs = _token_shift(x, prev)
+    xk = x + (xs - x) * p["mu_ck"].astype(x.dtype)
+    xr = x + (xs - x) * p["mu_cr"].astype(x.dtype)
+    rgate = jax.nn.sigmoid(
+        dense(xr, p["w_cr"], cfg, rt, "rwkv_cr").astype(jnp.float32))
+    h = dense(xk, p["w_ck"], cfg, rt, "rwkv_ck")
+    h = jnp.square(jax.nn.relu(h.astype(jnp.float32))).astype(x.dtype)
+    out = (rgate * dense(h, p["w_cv"], cfg, rt, "rwkv_cv")
+           .astype(jnp.float32)).astype(x.dtype)
+    return out, x
+
+
+def rwkv6_decode(x: jax.Array, p: Dict[str, jax.Array], cfg: ArchConfig,
+                 state, rt: RuntimeCfg = DEFAULT_RT):
+    """One-token time-mix. state = (S (B,nh,hd,hd) f32, prev_x (B,1,d),
+    prev_x_cm (B,1,d)). Returns (out_timemix_only, new_state) — channel-mix
+    handled by the caller with prev_x_cm."""
+    b, _, d = x.shape
+    hd = cfg.ssm_head_dim
+    nh = d // hd
+    S, prev_x = state
+
+    xs = _token_shift(x, prev_x)
+    def mix(name):
+        return x + (xs - x) * p[f"mu_{name}"].astype(x.dtype)
+    r = dense(mix("r"), p["w_r"], cfg, rt, "rwkv_r").reshape(b, nh, hd)
+    k = dense(mix("k"), p["w_k"], cfg, rt, "rwkv_k").reshape(b, nh, hd)
+    v = dense(mix("v"), p["w_v"], cfg, rt, "rwkv_v").reshape(b, nh, hd)
+    g = dense(mix("g"), p["w_g"], cfg, rt, "rwkv_g")
+    wlog = dense(mix("w"), p["w_w"], cfg, rt, "rwkv_w").reshape(b, nh, hd)
+    w = jnp.exp(-jnp.exp(wlog.astype(jnp.float32) + p["w_bias"].reshape(nh, hd)))
+    u = p["u"].reshape(nh, hd).astype(jnp.float32)
+
+    r32, k32, v32 = (t.astype(jnp.float32) for t in (r, k, v))
+    kv = jnp.einsum("bhi,bhj->bhij", k32, v32)
+    y = jnp.einsum("bhi,bhij->bhj", r32, S + u[None, :, :, None] * kv)
+    S = S * w[:, :, :, None] + kv
+
+    yh = y.reshape(b, nh, hd)
+    mean = yh.mean(-1, keepdims=True)
+    var = yh.var(-1, keepdims=True)
+    yh = (yh - mean) * jax.lax.rsqrt(var + 64e-5)
+    y = (yh.reshape(b, 1, d) * jax.nn.silu(g.astype(jnp.float32))).astype(x.dtype)
+    out = dense(y, p["w_o"], cfg, rt, "rwkv_o")
+    return out, (S, x)
+
+
+def init_rwkv6(key, cfg: ArchConfig, dtype):
+    d, f = cfg.d_model, cfg.d_ff
+    hd = cfg.ssm_head_dim
+    nh = d // hd
+    ks = jax.random.split(key, 10)
+    p = {
+        "w_r": _init(ks[0], (d, d), dtype),
+        "w_k": _init(ks[1], (d, d), dtype),
+        "w_v": _init(ks[2], (d, d), dtype),
+        "w_g": _init(ks[3], (d, d), dtype),
+        "w_w": _init(ks[4], (d, d), dtype, scale=0.01),
+        "w_o": _init(ks[5], (d, d), dtype),
+        "w_bias": jnp.full((nh * hd,), -0.6, jnp.float32),
+        "u": jnp.zeros((nh * hd,), jnp.float32),
+        "w_cr": _init(ks[6], (d, d), dtype),
+        "w_ck": _init(ks[7], (d, f), dtype),
+        "w_cv": _init(ks[8], (f, d), dtype),
+    }
+    for name in ("r", "k", "v", "g", "w"):
+        p[f"mu_{name}"] = jnp.full((d,), 0.5, jnp.float32)
+    p["mu_ck"] = jnp.full((d,), 0.5, jnp.float32)
+    p["mu_cr"] = jnp.full((d,), 0.5, jnp.float32)
+    return p

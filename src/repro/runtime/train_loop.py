@@ -1,0 +1,134 @@
+"""Train-step builder: loss, grads, compression, optimizer, metrics.
+
+``make_train_step`` returns a pure function suitable for ``jax.jit`` with
+in/out shardings from runtime/sharding.py; the launcher (launch/train.py)
+and the dry-run (launch/dryrun.py) both consume it.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, RunConfig
+from repro.models import forward
+from repro.models.transformer import forward_hidden
+from repro.models.layers import RuntimeCfg, DEFAULT_RT, lm_logits
+from repro.optim import adamw
+from repro.optim import grad_compress as gc
+
+AUX_LOSS_WEIGHT = 0.01
+CE_CHUNK = 512         # seq-chunked fused LM-head loss (never materializes
+                       # the full f32 (B, S, V) logits tensor)
+
+
+class TrainState(NamedTuple):
+    params: Any
+    opt: adamw.AdamWState
+    grad_error: Optional[Any]       # int8 error-feedback carry (or None)
+
+
+def cross_entropy(logits: jax.Array, labels: jax.Array,
+                  vocab_size: int) -> jax.Array:
+    """Mean next-token CE. logits (B,S,Vp) f32 (padding already -inf)."""
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    ll = jnp.take_along_axis(logp, labels[..., None], axis=-1)[..., 0]
+    return -jnp.mean(ll)
+
+
+def chunked_cross_entropy(hidden: jax.Array, head_w: jax.Array,
+                          labels: jax.Array, vocab_size: int,
+                          chunk: int = CE_CHUNK) -> jax.Array:
+    """Fused head+CE over seq chunks; each chunk rematted so backward
+    recomputes its logits instead of keeping them resident."""
+    b, s, d = hidden.shape
+    chunk = min(chunk, s)
+    assert s % chunk == 0, (s, chunk)
+
+    def one(h_c, l_c):
+        logits = lm_logits(h_c, head_w, vocab_size)
+        logp = jax.nn.log_softmax(logits, axis=-1)
+        ll = jnp.take_along_axis(logp, l_c[..., None], axis=-1)[..., 0]
+        return -jnp.sum(ll)
+
+    one = jax.checkpoint(one)
+    total = jnp.zeros((), jnp.float32)
+    for i in range(s // chunk):
+        sl = slice(i * chunk, (i + 1) * chunk)
+        total = total + one(hidden[:, sl], labels[:, sl])
+    return total / (b * s)
+
+
+def make_loss_fn(cfg: ArchConfig, rt: RuntimeCfg):
+    def loss_fn(params, batch):
+        hidden, aux = forward_hidden(params, batch["inputs"], cfg, rt)
+        ce = chunked_cross_entropy(hidden, params["head"], batch["labels"],
+                                   cfg.vocab_size)
+        loss = ce + AUX_LOSS_WEIGHT * aux
+        return loss, {"loss": loss, "ce": ce, "aux": aux}
+    return loss_fn
+
+
+def init_state(params, opt_cfg: adamw.AdamWConfig,
+               grad_compress: str = "none") -> TrainState:
+    err = gc.init_error(params) if grad_compress == "int8_ef" else None
+    return TrainState(params=params, opt=adamw.init(params, opt_cfg),
+                      grad_error=err)
+
+
+def make_train_step(cfg: ArchConfig, opt_cfg: adamw.AdamWConfig,
+                    rt: RuntimeCfg = DEFAULT_RT,
+                    grad_compress: str = "none",
+                    microbatch: int = 0):
+    """Returns train_step(state, batch) -> (state, metrics).
+
+    ``microbatch > 0`` enables gradient accumulation: the global batch is
+    split into ``global_batch // microbatch`` sequential chunks (scanned) —
+    the activation-memory knob for the big train cells.
+    """
+    loss_fn = make_loss_fn(cfg, rt)
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    def compute_grads(params, batch):
+        if not microbatch:
+            (loss, metrics), grads = grad_fn(params, batch)
+            return grads, metrics
+        b = batch["inputs"].shape[0]
+        assert b % microbatch == 0, (b, microbatch)
+        n_chunks = b // microbatch
+        chunked = jax.tree.map(
+            lambda x: x.reshape(n_chunks, microbatch, *x.shape[1:]), batch)
+
+        def body(acc, mb):
+            (loss, metrics), grads = grad_fn(params, mb)
+            acc = jax.tree.map(jnp.add, acc, grads)
+            return acc, metrics
+        zeros = jax.tree.map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        grads, metrics = jax.lax.scan(body, zeros, chunked)
+        grads = jax.tree.map(lambda g: g / n_chunks, grads)
+        metrics = jax.tree.map(lambda m: m[-1], metrics)
+        return grads, metrics
+
+    def train_step(state: TrainState, batch) -> Tuple[TrainState, Dict]:
+        grads, metrics = compute_grads(state.params, batch)
+        new_err = state.grad_error
+        if grad_compress == "bf16":
+            grads = gc.compress_bf16(grads)
+        elif grad_compress == "int8_ef":
+            grads, new_err = gc.compress_int8_ef(grads, state.grad_error)
+        new_params, new_opt, opt_metrics = adamw.apply(
+            state.params, grads, state.opt, opt_cfg)
+        metrics = {**metrics, **opt_metrics}
+        return TrainState(new_params, new_opt, new_err), metrics
+
+    return train_step
+
+
+def state_shape(cfg: ArchConfig, opt_cfg: adamw.AdamWConfig,
+                params_shape_tree, grad_compress: str = "none") -> TrainState:
+    return jax.eval_shape(
+        lambda p: init_state(p, opt_cfg, grad_compress), params_shape_tree)

@@ -1,0 +1,16 @@
+import jax
+import jax.numpy as jnp
+import pytest
+
+# NOTE: no XLA_FLAGS here on purpose — smoke tests and benches must see the
+# real single CPU device; only launch/dryrun.py forces 512 host devices.
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return jax.random.PRNGKey(0)
+
+
+def assert_finite(tree, what=""):
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        assert bool(jnp.isfinite(leaf).all()), f"non-finite {what} at {path}"

@@ -1,0 +1,95 @@
+"""Concurrency layer: metric properties + stream characterization runs."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import concurrency as cc
+
+
+def test_fairness_bounds():
+    assert cc.fairness([1.0, 1.0, 1.0]) == 1.0
+    assert cc.fairness([1.0, 2.0]) == pytest.approx(1 - 1 / 1.5)
+    assert cc.fairness([]) == 1.0
+    # severe imbalance can go negative (paper reports 0.016 at 8 streams)
+    assert cc.fairness([0.1, 10.0]) < 0.1
+
+
+def test_fairness_min_max():
+    assert cc.fairness_min_max([2.0, 2.0]) == 1.0
+    assert cc.fairness_min_max([1.0, 4.0]) == 0.25
+
+
+def test_cv():
+    assert cc.cv([1.0, 1.0]) == 0.0
+    assert cc.cv([1.0, 3.0]) == pytest.approx(0.5)
+
+
+def test_overlap_efficiency():
+    # perfect overlap: 4 streams of 1s each complete in 1s total
+    assert cc.overlap_efficiency(4.0, 1.0, 4) == 1.0
+    # no overlap: concurrent == serial
+    assert cc.overlap_efficiency(4.0, 4.0, 4) == 0.0
+    # halfway
+    assert cc.overlap_efficiency(4.0, 2.5, 4) == pytest.approx(0.5)
+
+
+def test_characterize_streams_runs():
+    def mk(i):
+        x = jax.random.normal(jax.random.PRNGKey(i), (128, 128))
+        f = jax.jit(lambda a: (a @ a).sum())
+        return lambda: f(x)
+    rep = cc.characterize_streams(mk, 2, mode="async")
+    assert rep.n_streams == 2
+    assert len(rep.per_stream_s) == 2
+    assert rep.wall_s > 0 and rep.serial_wall_s > 0
+    assert -5.0 <= rep.fairness <= 1.0
+    d = rep.to_dict()
+    assert set(d) >= {"speedup", "overlap_efficiency", "fairness", "cv"}
+
+
+def test_run_serial_returns_per_stream():
+    f = jax.jit(lambda a: a * 2)
+    x = jnp.ones((8, 8))
+    times = cc.run_serial([lambda: f(x)] * 3)
+    assert len(times) == 3 and all(t > 0 for t in times)
+
+
+# ---------------------------------------------------------------------------
+# Occupancy advisor (paper §9.2 rules)
+# ---------------------------------------------------------------------------
+
+def test_advisor_fp8_low_occupancy_prefers_bf16():
+    adv = cc.OccupancyAdvisor(n_cores=256)
+    a = adv.advise(cc.WorkloadProfile(precision="fp8", grid_tiles=128,
+                                      latency_sensitive=True))
+    assert a.suggested_precision == "bf16"
+    assert any("HBM latency" in r for r in a.rationale)
+
+
+def test_advisor_fp8_mid_occupancy_batches_up():
+    adv = cc.OccupancyAdvisor(n_cores=256)
+    a = adv.advise(cc.WorkloadProfile(precision="fp8", grid_tiles=300))
+    assert a.suggested_precision == "fp8"
+    assert a.batch_multiplier >= 2
+
+
+def test_advisor_sparsity_context_dependent():
+    adv = cc.OccupancyAdvisor(n_cores=256)
+    # isolated compute-bound: break-even -> off (paper §7.1)
+    iso = adv.advise(cc.WorkloadProfile(precision="bf16", grid_tiles=1024,
+                                        latency_sensitive=True,
+                                        concurrent_tenants=1))
+    assert not iso.use_sparsity
+    # multi-tenant: on (paper §7.2)
+    multi = adv.advise(cc.WorkloadProfile(precision="bf16", grid_tiles=1024,
+                                          latency_sensitive=True,
+                                          concurrent_tenants=4))
+    assert multi.use_sparsity
+
+
+def test_advisor_stream_limits():
+    adv = cc.OccupancyAdvisor()
+    lat = adv.advise(cc.WorkloadProfile("bf16", 512, latency_sensitive=True))
+    thr = adv.advise(cc.WorkloadProfile("bf16", 512, latency_sensitive=False))
+    assert lat.max_streams == 4 and thr.max_streams == 8

@@ -1,0 +1,99 @@
+"""Unit tests for core/fp8.py — formats, delayed scaling, matmul numerics."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import fp8
+
+
+def test_fp8_max_values():
+    assert fp8.fp8_max(fp8.E4M3) == 448.0
+    assert fp8.fp8_max(fp8.E5M2) == 57344.0
+
+
+def test_quantize_roundtrip_small_error():
+    key = jax.random.PRNGKey(0)
+    x = jax.random.normal(key, (64, 64), jnp.float32)
+    ts = fp8.update_scale(fp8.TensorScale.init(4), fp8.current_amax(x))
+    xq = fp8.quantize(x, ts)
+    xdq = xq.astype(jnp.float32) / ts.scale
+    # E4M3 has ~2 decimal digits: relative error bounded by 2^-3 of amax bin
+    assert float(jnp.max(jnp.abs(xdq - x))) < float(jnp.max(jnp.abs(x))) * 0.07
+
+
+def test_delayed_scaling_uses_history_max():
+    ts = fp8.TensorScale.init(4)
+    for amax in (1.0, 10.0, 2.0):
+        ts = fp8.update_scale(ts, jnp.float32(amax))
+    # history = [2, 10, 1, 0] -> max 10 -> scale 448/10
+    np.testing.assert_allclose(float(ts.scale), 44.8, rtol=1e-5)
+    # rolls out after `history` more updates
+    for _ in range(4):
+        ts = fp8.update_scale(ts, jnp.float32(1.0))
+    np.testing.assert_allclose(float(ts.scale), 448.0, rtol=1e-5)
+
+
+def test_zero_amax_guard():
+    ts = fp8.update_scale(fp8.TensorScale.init(2), jnp.float32(0.0))
+    assert float(ts.scale) == 1.0
+
+
+@pytest.mark.parametrize("mk,nk", [(8, 16), (32, 64)])
+def test_fp8_matmul_close_to_f32(mk, nk):
+    key = jax.random.PRNGKey(1)
+    x = jax.random.normal(key, (mk, 64), jnp.float32)
+    w = jax.random.normal(jax.random.PRNGKey(2), (64, nk), jnp.float32)
+    out = fp8.fp8_matmul(x, w, jnp.float32(1.0), jnp.float32(1.0))
+    ref = x @ w
+    rel = float(jnp.linalg.norm(out - ref) / jnp.linalg.norm(ref))
+    assert rel < 0.08, rel
+
+
+def test_fp8_matmul_gradients_close():
+    key = jax.random.PRNGKey(3)
+    x = jax.random.normal(key, (16, 32), jnp.float32)
+    w = jax.random.normal(jax.random.PRNGKey(4), (32, 8), jnp.float32)
+
+    def loss_q(x, w):
+        return jnp.sum(fp8.fp8_matmul(x, w, jnp.float32(1.0),
+                                      jnp.float32(1.0)) ** 2)
+
+    def loss_f(x, w):
+        return jnp.sum((x @ w) ** 2)
+
+    gq = jax.grad(loss_q, argnums=(0, 1))(x, w)
+    gf = jax.grad(loss_f, argnums=(0, 1))(x, w)
+    for a, b in zip(gq, gf):
+        rel = float(jnp.linalg.norm(a - b) / jnp.linalg.norm(b))
+        assert rel < 0.15, rel
+
+
+def test_scale_gradients_are_zero():
+    x = jnp.ones((4, 8))
+    w = jnp.ones((8, 4))
+
+    def loss(s):
+        return jnp.sum(fp8.fp8_matmul(x, w, s, jnp.float32(1.0)))
+    g = jax.grad(loss)(jnp.float32(1.0))
+    assert float(g) == 0.0
+
+
+def test_dynamic_fp8_matmul_scales_large_values():
+    # values far outside fp8 range still multiply correctly via scaling
+    x = jnp.full((4, 8), 1e4, jnp.float32)
+    w = jnp.full((8, 4), 2e-6, jnp.float32)
+    out = fp8.dynamic_fp8_matmul(x, w, out_dtype=jnp.float32)
+    np.testing.assert_allclose(np.asarray(out), 8 * 1e4 * 2e-6, rtol=0.05)
+
+
+def test_fp8_linear_state_threading():
+    state = fp8.init_fp8_state(["l1"], history=4)
+    x = jnp.ones((4, 8))
+    w = jnp.full((8, 4), 2.0)
+    collect = {}
+    out = fp8.fp8_linear(x, w, state, "l1", collect=collect)
+    assert out.shape == (4, 4)
+    assert set(collect) == {"l1/x", "l1/w"}
+    new = fp8.fold_amaxes(state, collect)
+    assert float(new["l1/w"].amax_history[0]) == 2.0

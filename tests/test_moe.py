@@ -1,0 +1,105 @@
+"""MoE router/dispatch invariants + layer behavior."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_reduced
+from repro.models import moe
+from repro.models.layers import RuntimeCfg
+
+RT = RuntimeCfg(ssm_chunk=16)
+
+
+@pytest.fixture
+def cfg():
+    return get_reduced("granite-moe-3b-a800m")   # 8e top-2 reduced
+
+
+def test_capacity_formula(cfg):
+    c = moe.capacity(cfg, 64)
+    assert c == int(np.ceil(64 * cfg.experts_top_k
+                            * cfg.moe_capacity_factor / cfg.num_experts))
+    assert moe.capacity(cfg, 1) >= 1
+
+
+def test_dispatch_respects_capacity(cfg):
+    G, gs, E = 2, 64, cfg.num_experts
+    cap = moe.capacity(cfg, gs)
+    logits = jax.random.normal(jax.random.PRNGKey(0), (G, gs, E))
+    combine, dispatch, aux = moe.router_dispatch(logits, cfg, cap)
+    assert combine.shape == (G, gs, E, cap)
+    # each (expert, slot) holds at most one token
+    per_slot = np.asarray(dispatch).sum(axis=1)          # (G, E, C)
+    assert per_slot.max() <= 1
+    # each token occupies at most top_k slots
+    per_token = np.asarray(dispatch).sum(axis=(2, 3))    # (G, gs)
+    assert per_token.max() <= cfg.experts_top_k
+    # combine weights are convex-ish: within [0, 1], sum <= 1 per token
+    cw = np.asarray(combine)
+    assert cw.min() >= 0.0 and cw.max() <= 1.0 + 1e-6
+    assert cw.sum(axis=(2, 3)).max() <= 1.0 + 1e-5
+
+
+def test_dispatch_weights_match_topk_softmax(cfg):
+    """Where capacity is not binding, combine == renormalized top-k gates."""
+    big = dataclasses.replace(cfg, moe_capacity_factor=8.0)
+    G, gs, E = 1, 16, big.num_experts
+    cap = moe.capacity(big, gs)
+    logits = jax.random.normal(jax.random.PRNGKey(1), (G, gs, E))
+    combine, dispatch, _ = moe.router_dispatch(logits, big, cap)
+    gates = jax.nn.softmax(logits, -1)
+    topv, topi = jax.lax.top_k(gates, big.experts_top_k)
+    topv = topv / topv.sum(-1, keepdims=True)
+    got = np.asarray(combine).sum(axis=-1)               # (G, gs, E)
+    want = np.zeros_like(got)
+    for g in range(G):
+        for s in range(gs):
+            for j in range(big.experts_top_k):
+                want[g, s, int(topi[g, s, j])] += float(topv[g, s, j])
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-6)
+
+
+def test_aux_loss_balanced_router_near_one(cfg):
+    # random logits route ~uniformly in expectation -> aux ~ 1.0; a badly
+    # imbalanced router (all tokens to expert 0) scores higher
+    G, gs, E = 2, 512, cfg.num_experts
+    cap = moe.capacity(cfg, gs)
+    logits = jax.random.normal(jax.random.PRNGKey(0), (G, gs, E)) * 0.01
+    _, _, aux = moe.router_dispatch(logits, cfg, cap)
+    np.testing.assert_allclose(float(aux), 1.0, rtol=0.25)
+    hot = jnp.zeros((G, gs, E)).at[..., 0].set(10.0)
+    _, _, aux_hot = moe.router_dispatch(hot, cfg, cap)
+    assert float(aux_hot) > float(aux) * 1.5
+
+
+def test_moe_layer_forward_and_grads(cfg):
+    p = moe.init_moe(jax.random.PRNGKey(2), cfg, jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(3), (2, 64, cfg.d_model),
+                          jnp.float32)
+
+    def loss(p, x):
+        out, aux = moe.moe_mlp(x, p, cfg, RT)
+        return jnp.mean(out ** 2) + 0.01 * aux
+    val, grads = jax.value_and_grad(loss)(p, x)
+    assert np.isfinite(float(val))
+    for path, g in jax.tree_util.tree_flatten_with_path(grads)[0]:
+        assert bool(jnp.isfinite(g).all()), path
+    # router receives gradient (learnable routing)
+    assert float(jnp.abs(grads["router"]).sum()) > 0
+
+
+def test_shared_expert_added():
+    cfg = get_reduced("llama4-scout-17b-a16e")
+    p = moe.init_moe(jax.random.PRNGKey(4), cfg, jnp.float32)
+    assert "shared" in p
+    x = jax.random.normal(jax.random.PRNGKey(5), (2, 64, cfg.d_model),
+                          jnp.float32)
+    out, _ = moe.moe_mlp(x, p, cfg, RT)
+    # zeroing the shared expert changes the output
+    p2 = dict(p)
+    p2["shared"] = jax.tree.map(jnp.zeros_like, p["shared"])
+    out2, _ = moe.moe_mlp(x, p2, cfg, RT)
+    assert float(jnp.abs(out - out2).max()) > 1e-4

@@ -1,0 +1,182 @@
+"""Property-based tests (hypothesis) for the system's invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import concurrency as cc
+from repro.core import fp8, sparsity as sp
+
+SET = settings(max_examples=25, deadline=None)
+
+
+# ---------------------------------------------------------------------------
+# FP8 quantization properties
+# ---------------------------------------------------------------------------
+
+@SET
+@given(st.lists(st.floats(min_value=-1e4, max_value=1e4,
+                          allow_nan=False, width=32),
+                min_size=4, max_size=64))
+def test_fp8_quantize_bounded_error(vals):
+    x = jnp.asarray(vals, jnp.float32)
+    amax = float(jnp.max(jnp.abs(x)))
+    if amax == 0.0:
+        return
+    ts = fp8.update_scale(fp8.TensorScale.init(2), jnp.float32(amax))
+    xdq = fp8.quantize(x, ts).astype(jnp.float32) / ts.scale
+    # E4M3 relative step is 2^-3 at worst within a binade of the max
+    assert float(jnp.max(jnp.abs(xdq - x))) <= amax * (2 ** -3) + 1e-6
+
+
+@SET
+@given(st.floats(min_value=1e-6, max_value=1e6, allow_nan=False))
+def test_fp8_scale_positive_finite(amax):
+    ts = fp8.update_scale(fp8.TensorScale.init(4), jnp.float32(amax))
+    assert np.isfinite(float(ts.scale)) and float(ts.scale) > 0
+
+
+# ---------------------------------------------------------------------------
+# 2:4 sparsity properties
+# ---------------------------------------------------------------------------
+
+@SET
+@given(st.integers(min_value=1, max_value=8).map(lambda g: g * 8),
+       st.integers(min_value=1, max_value=16),
+       st.integers(min_value=0, max_value=2 ** 31 - 1))
+def test_prune_pack_unpack_roundtrip(k, n, seed):
+    w = jax.random.normal(jax.random.PRNGKey(seed), (k, n))
+    w24 = sp.prune_24(w)
+    assert bool(sp.check_24(w24))
+    vals, meta = sp.pack_24(w24)
+    np.testing.assert_array_equal(np.asarray(sp.unpack_24(vals, meta)),
+                                  np.asarray(w24))
+
+
+@SET
+@given(st.integers(min_value=0, max_value=2 ** 31 - 1))
+def test_prune_preserves_l1_at_least_half(seed):
+    """Keeping the 2 largest of 4 preserves >= 50% of every group's |mass|."""
+    w = jax.random.normal(jax.random.PRNGKey(seed), (32, 8))
+    w24 = sp.prune_24(w)
+    g = np.abs(np.asarray(w)).reshape(8, 4, 8).sum(axis=1)
+    g24 = np.abs(np.asarray(w24)).reshape(8, 4, 8).sum(axis=1)
+    assert (g24 >= 0.5 * g - 1e-5).all()
+
+
+@SET
+@given(st.integers(min_value=0, max_value=2 ** 31 - 1))
+def test_sparse_matmul_error_zero(seed):
+    keys = jax.random.split(jax.random.PRNGKey(seed))
+    x = jax.random.normal(keys[0], (4, 32))
+    w24 = sp.prune_24(jax.random.normal(keys[1], (32, 8)))
+    vals, meta = sp.pack_24(w24)
+    got = sp.sparse24_matmul_ref(x, vals, meta, out_dtype=jnp.float32)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(x @ w24),
+                               rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# Concurrency metric properties
+# ---------------------------------------------------------------------------
+
+@SET
+@given(st.lists(st.floats(min_value=1e-3, max_value=1e3, allow_nan=False),
+                min_size=1, max_size=16))
+def test_fairness_le_one_and_permutation_invariant(times):
+    f = cc.fairness(times)
+    assert f <= 1.0 + 1e-9
+    assert cc.fairness(list(reversed(times))) == pytest.approx(f)
+    # scale invariance
+    assert cc.fairness([t * 7.5 for t in times]) == pytest.approx(f)
+
+
+@SET
+@given(st.lists(st.floats(min_value=1e-3, max_value=1e3, allow_nan=False),
+                min_size=2, max_size=16))
+def test_fairness_min_max_in_unit_interval(times):
+    f = cc.fairness_min_max(times)
+    assert 0.0 < f <= 1.0 + 1e-9
+
+
+@SET
+@given(st.floats(min_value=0.1, max_value=100.0),
+       st.integers(min_value=2, max_value=16))
+def test_overlap_efficiency_bounds(serial, n):
+    # e == 1 at perfect overlap, 0 at fully serial, negative if concurrency
+    # SLOWS things down (real contention regimes) — bounded below by -n/(n-1)
+    for conc, lo, hi in ((serial / n, 1.0, 1.0), (serial, 0.0, 0.0),
+                         (serial / 2, 0.0, 1.0),
+                         (serial * 1.5, -n / (n - 1) - 1e-9, 0.0)):
+        e = cc.overlap_efficiency(serial, conc, n)
+        assert lo - 1e-9 <= e <= hi + 1e-9, (e, conc)
+
+
+# ---------------------------------------------------------------------------
+# Attention: chunked == dense reference across random shapes
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=8, deadline=None)
+@given(st.sampled_from([(1, 64, 2, 1, 16), (2, 128, 4, 2, 32),
+                        (1, 96, 3, 3, 16)]),
+       st.sampled_from([32, 64]),
+       st.booleans())
+def test_chunked_attention_matches_reference(dims, chunk, windowed):
+    from repro.kernels.ref import flash_attention_ref
+    from repro.models.attention import chunked_attention
+    from repro.models.layers import RuntimeCfg
+    b, s, h, kvh, hd = dims
+    if s % chunk:
+        return
+    keys = jax.random.split(jax.random.PRNGKey(hash(dims) % 2 ** 31), 3)
+    q = jax.random.normal(keys[0], (b, s, h, hd))
+    k = jax.random.normal(keys[1], (b, s, kvh, hd))
+    v = jax.random.normal(keys[2], (b, s, kvh, hd))
+    window = 32 if windowed else 0
+    rt = RuntimeCfg(chunk_q=chunk, chunk_kv=chunk, act_dtype=jnp.float32)
+    got = chunked_attention(q, k, v, causal=True, window=window, rt=rt)
+    if windowed:
+        # reference with explicit banded mask
+        import math
+        kk = jnp.repeat(k, h // kvh, axis=2)
+        vv = jnp.repeat(v, h // kvh, axis=2)
+        sco = jnp.einsum("bqhd,bkhd->bhqk", q, kk) / math.sqrt(hd)
+        qi = jnp.arange(s)[:, None]
+        ki = jnp.arange(s)[None, :]
+        mask = (qi >= ki) & (qi - ki < window)
+        sco = jnp.where(mask[None, None], sco, -1e30)
+        want = jnp.einsum("bhqk,bkhd->bqhd", jax.nn.softmax(sco, -1), vv)
+    else:
+        want = flash_attention_ref(
+            q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
+            v.transpose(0, 2, 1, 3), causal=True).transpose(0, 2, 1, 3)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=2e-3, atol=2e-3)
+
+
+# ---------------------------------------------------------------------------
+# Scan-vs-static loop equivalence (the memory-probe lowering is numerically
+# identical to the cost lowering)
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=6, deadline=None)
+@given(st.integers(min_value=0, max_value=2 ** 31 - 1))
+def test_attention_static_vs_scan_loops(seed):
+    from repro.models.attention import chunked_attention
+    from repro.models.layers import RuntimeCfg
+    keys = jax.random.split(jax.random.PRNGKey(seed), 3)
+    q = jax.random.normal(keys[0], (1, 128, 2, 16))
+    k = jax.random.normal(keys[1], (1, 128, 2, 16))
+    v = jax.random.normal(keys[2], (1, 128, 2, 16))
+    a = chunked_attention(q, k, v, causal=True,
+                          rt=RuntimeCfg(chunk_q=32, chunk_kv=32,
+                                        static_loops=True,
+                                        act_dtype=jnp.float32))
+    b = chunked_attention(q, k, v, causal=True,
+                          rt=RuntimeCfg(chunk_q=32, chunk_kv=32,
+                                        static_loops=False,
+                                        act_dtype=jnp.float32))
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                               rtol=1e-5, atol=1e-5)

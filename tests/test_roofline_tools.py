@@ -1,0 +1,134 @@
+"""Roofline machinery unit tests: HLO collective parser, wire models,
+term assembly, precision policies."""
+import pytest
+
+from repro.core import precision as pp
+from repro.launch import roofline as rl
+
+HLO_SAMPLE = """
+  %all-reduce.2 = f32[16,512]{1,0} all-reduce(%dot.1), channel_id=1, replica_groups=[4,8]<=[32], use_global_device_ids=true, to_apply=%add
+  %all-gather.7 = bf16[8,4096,1536]{2,1,0} all-gather(%p), channel_id=2, replica_groups=[16,16]<=[256], dimensions={1}
+  %reduce-scatter.1 = f32[8,256]{1,0} reduce-scatter(%x), channel_id=3, replica_groups=[1,16]<=[16], dimensions={1}, to_apply=%add
+  %all-to-all.3 = f32[64,128]{1,0} all-to-all(%y), channel_id=4, replica_groups=[2,8]<=[16]
+  %collective-permute.1 = bf16[4,4]{1,0} collective-permute(%z), channel_id=5, source_target_pairs={{0,1}}
+  %dot.5 = f32[128,128]{1,0} dot(%a, %b), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+"""
+
+
+def test_parser_finds_all_collectives():
+    colls = rl.parse_collectives(HLO_SAMPLE)
+    kinds = sorted(c.kind for c in colls)
+    assert kinds == ["all-gather", "all-reduce", "all-to-all",
+                     "collective-permute", "reduce-scatter"]
+
+
+def test_parser_shapes_dtypes_groups():
+    colls = {c.kind: c for c in rl.parse_collectives(HLO_SAMPLE)}
+    ar = colls["all-reduce"]
+    assert ar.dtype == "f32" and ar.shape == (16, 512) and ar.group_size == 8
+    ag = colls["all-gather"]
+    assert ag.dtype == "bf16" and ag.shape == (8, 4096, 1536)
+    assert ag.group_size == 16
+
+
+def test_wire_models():
+    colls = {c.kind: c for c in rl.parse_collectives(HLO_SAMPLE)}
+    ar = colls["all-reduce"]          # 16*512*4 bytes, g=8
+    assert ar.wire_bytes == pytest.approx(2 * 7 / 8 * 16 * 512 * 4)
+    ag = colls["all-gather"]          # result is gathered: (g-1)/g * result
+    assert ag.wire_bytes == pytest.approx(15 / 16 * 8 * 4096 * 1536 * 2)
+    rs = colls["reduce-scatter"]      # result is scattered: (g-1) * result
+    assert rs.wire_bytes == pytest.approx(15 * 8 * 256 * 4)
+    cp = colls["collective-permute"]
+    assert cp.wire_bytes == 4 * 4 * 2
+
+
+def test_wire_bf16_caps_f32():
+    colls = {c.kind: c for c in rl.parse_collectives(HLO_SAMPLE)}
+    ar = colls["all-reduce"]
+    assert ar.wire_bytes_bf16 == pytest.approx(ar.wire_bytes / 2)
+    ag = colls["all-gather"]          # already bf16: unchanged
+    assert ag.wire_bytes_bf16 == pytest.approx(ag.wire_bytes)
+
+
+def test_assembly_scales_layers():
+    full = rl.CellCost(flops=100.0, bytes_accessed=1000.0, wire_bytes=10.0,
+                       collectives={}, wire_bytes_bf16=5.0)
+    layer = rl.CellCost(flops=50.0, bytes_accessed=200.0, wire_bytes=4.0,
+                        collectives={}, wire_bytes_bf16=2.0)
+    roof = rl.assemble("a", "s", 256, full, layer, n_bodies=5,
+                       model_flops=1e6, kind="train")
+    assert roof.flops == 100 + 4 * 50
+    assert roof.bytes_accessed == 1000 + 4 * 200
+    assert roof.wire_bytes == 10 + 4 * 4
+    assert roof.compute_s == pytest.approx(300 / rl.PEAK_FLOPS)
+    assert roof.bottleneck in ("compute", "memory", "collective")
+    assert roof.step_s == max(roof.compute_s, roof.memory_s,
+                              roof.collective_s)
+
+
+def test_decode_fraction_uses_memory_ideal():
+    cost = rl.CellCost(1e9, 1e10, 1e8, {}, 1e8)
+    roof = rl.assemble("a", "decode", 256, cost, None, 1,
+                       model_flops=1e12, min_bytes=2.56e12, kind="decode")
+    ideal = 2.56e12 / (256 * rl.HBM_BW)
+    assert roof.roofline_fraction == pytest.approx(ideal / roof.step_s)
+
+
+def test_model_flops_estimates():
+    from repro.configs import ARCHS, SHAPES
+    cfg = ARCHS["llama3-8b"]
+    tr = rl.model_flops_estimate(cfg, SHAPES["train_4k"])
+    assert tr == pytest.approx(6 * cfg.param_count() * 256 * 4096, rel=1e-6)
+    dec = rl.model_flops_estimate(cfg, SHAPES["decode_32k"])
+    assert dec == pytest.approx(2 * cfg.param_count() * 128, rel=1e-6)
+    # MoE uses active params
+    moe = ARCHS["llama4-scout-17b-a16e"]
+    tr_moe = rl.model_flops_estimate(moe, SHAPES["train_4k"])
+    assert tr_moe < 6 * moe.param_count() * 256 * 4096
+
+
+def test_min_bytes_estimate_windows():
+    from repro.configs import ARCHS, SHAPES
+    g = ARCHS["gemma3-12b"]
+    full = ARCHS["llama3-8b"]
+    mg = rl.min_bytes_estimate(g, SHAPES["decode_32k"])
+    mf = rl.min_bytes_estimate(full, SHAPES["decode_32k"])
+    # gemma's local layers read only their 1024-token window
+    assert mg < 2 * g.param_count() + 48 * 128 * 32768 * g.kv_dim * 4
+    assert mf > 2 * full.param_count()
+
+
+# ---------------------------------------------------------------------------
+# Precision policies
+# ---------------------------------------------------------------------------
+
+def test_policies_validate():
+    for p in pp.POLICIES.values():
+        pp.validate(p)
+
+
+def test_fp8_policy_keeps_sensitive_ops_high():
+    p = pp.FP8_TRAINING
+    assert p.uses_fp8()
+    assert p.dtype_for("router") == "f32"
+    assert p.dtype_for("ssm_recurrence") == "f32"
+    assert p.dtype_for("mlp") == "fp8"
+
+
+def test_policy_resolution():
+    assert pp.policy_for("fp8").name == "fp8_training"
+    assert pp.policy_for("fp8", serving=True).name == "fp8_serving"
+    assert pp.policy_for("bf16").name == "bf16_baseline"
+
+
+def test_validate_rejects_fp8_router():
+    bad = pp.PrecisionPolicy("bad", {**pp.BF16_BASELINE.rules,
+                                     "router": "fp8"})
+    with pytest.raises(ValueError, match="must not run in FP8"):
+        pp.validate(bad)
+
+
+def test_unknown_op_class_raises():
+    with pytest.raises(KeyError):
+        pp.BF16_BASELINE.dtype_for("nonexistent")

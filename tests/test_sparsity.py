@@ -1,0 +1,88 @@
+"""Unit tests for core/sparsity.py — 2:4 invariants and packed matmul."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import sparsity as sp
+
+
+def test_prune_keeps_top2_magnitudes():
+    w = jnp.array([[1.0], [-3.0], [2.0], [0.5],
+                   [4.0], [0.1], [-0.2], [5.0]])
+    w24 = sp.prune_24(w)
+    np.testing.assert_array_equal(
+        np.asarray(w24[:, 0]), [0.0, -3.0, 2.0, 0.0, 4.0, 0.0, 0.0, 5.0])
+
+
+def test_prune_is_24(rng):
+    w = jax.random.normal(rng, (128, 32))
+    w24 = sp.prune_24(w)
+    assert bool(sp.check_24(w24))
+    assert float((w24 != 0).mean()) == 0.5
+
+
+def test_prune_idempotent(rng):
+    w = jax.random.normal(rng, (64, 16))
+    w24 = sp.prune_24(w)
+    np.testing.assert_array_equal(np.asarray(sp.prune_24(w24)),
+                                  np.asarray(w24))
+
+
+def test_pack_unpack_exact(rng):
+    w24 = sp.prune_24(jax.random.normal(rng, (64, 16)))
+    vals, meta = sp.pack_24(w24)
+    assert vals.shape == (32, 16)
+    assert meta.shape == (8, 16) and meta.dtype == jnp.uint8
+    np.testing.assert_array_equal(np.asarray(sp.unpack_24(vals, meta)),
+                                  np.asarray(w24))
+
+
+def test_pack_handles_fewer_than_two_nonzeros():
+    w = jnp.zeros((8, 2))
+    w = w.at[0, 0].set(3.0)   # group 0 of col 0 has ONE nonzero
+    vals, meta = sp.pack_24(w)
+    np.testing.assert_array_equal(np.asarray(sp.unpack_24(vals, meta)),
+                                  np.asarray(w))
+
+
+def test_sparse_matmul_matches_dense(rng):
+    x = jax.random.normal(rng, (8, 64))
+    w24 = sp.prune_24(jax.random.normal(jax.random.PRNGKey(7), (64, 16)))
+    vals, meta = sp.pack_24(w24)
+    out = sp.sparse24_matmul_ref(x, vals, meta, out_dtype=jnp.float32)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(x @ w24),
+                               rtol=1e-5, atol=1e-4)
+
+
+def test_block24_prune_and_matmul(rng):
+    w = jax.random.normal(rng, (512, 16))
+    wp, keep = sp.prune_block24(w, block=64)
+    assert float(keep.mean()) == 0.5
+    # kept blocks are untouched, dropped blocks all-zero
+    nb = 512 // 64
+    blocks = np.asarray(wp).reshape(nb, 64, 16)
+    for i, k in enumerate(np.asarray(keep)):
+        if k:
+            np.testing.assert_array_equal(
+                blocks[i], np.asarray(w).reshape(nb, 64, 16)[i])
+        else:
+            assert (blocks[i] == 0).all()
+    x = jax.random.normal(jax.random.PRNGKey(8), (4, 512))
+    kept_idx = tuple(int(i) for i in np.nonzero(np.asarray(keep))[0])
+    out = sp.block24_matmul_ref(x, wp, jnp.asarray(keep), block=64,
+                                out_dtype=jnp.float32)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(x @ wp),
+                               rtol=1e-4, atol=1e-3)
+
+
+def test_byte_accounting():
+    # packed fp8 = 0.3125x of dense bf16
+    assert sp.packed_bytes(128, 64) == 64 * 64 * 1 + 16 * 64
+    assert sp.dense_bytes(128, 64) == 128 * 64 * 2
+    assert sp.packed_bytes(128, 64) / sp.dense_bytes(128, 64) == 0.3125
+
+
+@pytest.fixture
+def rng():
+    return jax.random.PRNGKey(0)

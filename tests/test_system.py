@@ -1,0 +1,176 @@
+"""End-to-end behaviour tests: the training driver trains, checkpoints,
+restarts after failure; the serving session completes requests; the
+characterization engine produces the paper's statistics."""
+import argparse
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.launch.train import build_argparser, run_once
+
+
+def _args(**kw):
+    ap = build_argparser()
+    base = ap.parse_args(["--arch", kw.pop("arch", "llama3-8b"), "--reduced"])
+    for k, v in kw.items():
+        setattr(base, k, v)
+    return base
+
+
+def test_train_loss_decreases(tmp_path):
+    """Synthetic random tokens: CE must move toward ln(vocab) (uniform)."""
+    import numpy as np
+    from repro.configs import get_reduced
+    from repro.data.pipeline import SyntheticLM
+    from repro.models import init_params
+    from repro.models.layers import RuntimeCfg
+    from repro.optim import adamw
+    from repro.runtime import train_loop as tl
+
+    cfg = get_reduced("llama3-8b")
+    rt = RuntimeCfg(chunk_q=64, chunk_kv=64, ssm_chunk=32)
+    opt_cfg = adamw.AdamWConfig(learning_rate=1e-3, total_steps=1000,
+                                warmup_steps=5)
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    state = tl.init_state(params, opt_cfg)
+    step = jax.jit(tl.make_train_step(cfg, opt_cfg, rt))
+    data = SyntheticLM(cfg.vocab_size, 64, 4, seed=0)
+    losses = []
+    for i in range(40):
+        batch = {k: jnp.asarray(v) for k, v in data.batch_at(i).items()}
+        state, metrics = step(state, batch)
+        losses.append(float(metrics["loss"]))
+    first, last = np.mean(losses[:5]), np.mean(losses[-5:])
+    assert last < first, (first, last, losses)
+
+
+def test_train_checkpoint_resume_bitwise(tmp_path):
+    """train 20 steps straight == train 10, checkpoint, resume 10 more."""
+    d1, d2 = str(tmp_path / "a"), str(tmp_path / "b")
+    a = _args(steps=20, batch=2, seq=32, checkpoint_dir=d1,
+              checkpoint_every=100, log_every=100)
+    assert run_once(a) == 0
+
+    b1 = _args(steps=10, batch=2, seq=32, checkpoint_dir=d2,
+               checkpoint_every=5, log_every=100)
+    assert run_once(b1) == 0
+    b2 = _args(steps=20, batch=2, seq=32, checkpoint_dir=d2, resume=True,
+               checkpoint_every=100, log_every=100)
+    assert run_once(b2) == 0
+
+    from repro.checkpoint.manager import CheckpointManager
+    from repro.configs import get_reduced
+    from repro.models import init_params
+    from repro.optim import adamw
+    from repro.runtime import train_loop as tl
+    cfg = get_reduced("llama3-8b")
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    tmpl = tl.init_state(params, adamw.AdamWConfig())
+    s1 = CheckpointManager(d1).restore_latest(tmpl)[1]
+    s2 = CheckpointManager(d2).restore_latest(tmpl)[1]
+    for x, y in zip(jax.tree.leaves(s1.params), jax.tree.leaves(s2.params)):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+def test_supervised_restart_after_injected_failure(tmp_path):
+    """crash mid-run; the supervisor restarts from the last checkpoint and
+    completes the remaining steps."""
+    from repro.runtime.fault_tolerance import supervise
+    args = _args(steps=20, batch=2, seq=32,
+                 checkpoint_dir=str(tmp_path / "ck"), checkpoint_every=5,
+                 log_every=100)
+    attempts = []
+
+    def attempt():
+        a = argparse.Namespace(**vars(args))
+        a.resume = len(attempts) > 0
+        a.fail_at_step = 0 if attempts else 12
+        attempts.append(1)
+        try:
+            return run_once(a)
+        except RuntimeError:
+            return 1
+    assert supervise(attempt, max_restarts=2, backoff_s=0.0,
+                     log=lambda *a: None) == 0
+    assert len(attempts) == 2
+
+
+def test_fp8_and_sparse_training_run():
+    for kw in ({"precision": "fp8"}, {"sparsity_24": True}):
+        args = _args(steps=5, batch=2, seq=32, log_every=100, **kw)
+        assert run_once(args) == 0
+
+
+def test_grad_compression_training_runs():
+    args = _args(steps=5, batch=2, seq=32, log_every=100,
+                 grad_compress="int8_ef")
+    assert run_once(args) == 0
+
+
+def test_microbatch_matches_full_batch():
+    """Gradient accumulation over 2 microbatches ~= full-batch step."""
+    from repro.configs import get_reduced
+    from repro.models import init_params
+    from repro.models.layers import RuntimeCfg
+    from repro.optim import adamw
+    from repro.runtime import train_loop as tl
+    cfg = get_reduced("llama3-8b")
+    rt = RuntimeCfg(chunk_q=32, chunk_kv=32, ssm_chunk=16)
+    opt_cfg = adamw.AdamWConfig(total_steps=10, warmup_steps=0)
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    batch = {
+        "inputs": jax.random.randint(jax.random.PRNGKey(1), (4, 32), 0,
+                                     cfg.vocab_size),
+        "labels": jax.random.randint(jax.random.PRNGKey(2), (4, 32), 0,
+                                     cfg.vocab_size),
+    }
+    s_full = tl.init_state(params, opt_cfg)
+    s_micro = tl.init_state(params, opt_cfg)
+    full = jax.jit(tl.make_train_step(cfg, opt_cfg, rt))
+    micro = jax.jit(tl.make_train_step(cfg, opt_cfg, rt, microbatch=2))
+    s_full, _ = full(s_full, batch)
+    s_micro, _ = micro(s_micro, batch)
+    for x, y in zip(jax.tree.leaves(s_full.params),
+                    jax.tree.leaves(s_micro.params)):
+        np.testing.assert_allclose(np.asarray(x, np.float32),
+                                   np.asarray(y, np.float32),
+                                   rtol=2e-2, atol=2e-2)
+
+
+def test_serve_session_completes_requests():
+    from repro.configs import get_reduced
+    from repro.models import init_params
+    from repro.models.layers import RuntimeCfg
+    from repro.runtime.serve_loop import Request, ServeSession
+    cfg = get_reduced("llama3-8b")
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    sess = ServeSession(params, cfg, batch_slots=2, max_len=64,
+                        rt=RuntimeCfg(ssm_chunk=16))
+    for uid in range(3):
+        sess.submit(Request(uid=uid,
+                            prompt=np.array([1, 2, 3], np.int32),
+                            max_new=4))
+    done = sess.run()
+    assert len(done) == 3
+    for r in done:
+        assert len(r.out) == 4
+        assert all(0 <= t < cfg.padded_vocab for t in r.out)
+
+
+def test_characterization_sweeps_produce_records():
+    from repro.core import characterization as ch
+    occ = ch.occupancy_sweep(tile_counts=(1, 2), tile_m=64, k=64, n=64,
+                             precisions=("fp32", "fp8"), iters=2)
+    assert len(occ) == 4
+    th = ch.occupancy_threshold(occ)
+    assert set(th) == {"fp32", "fp8"}
+    shp = ch.shape_sweep(total_mn=128 * 128, k=64, ratios=(1.0, 4.0),
+                         precisions=("bf16",), iters=2)
+    assert len(shp) == 2
+    lat = ch.latency_probe(tile_shapes=((128, 128, 128),),
+                           precisions=("bf16",), chain=4, iters=2)
+    assert lat and lat[0].us_per_call > 0
+    for r in occ + shp + lat:
+        assert "," in r.csv()
