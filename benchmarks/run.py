@@ -1,5 +1,15 @@
 """Run every benchmark (one per paper table/figure) and print
-``name,us_per_call,derived`` CSV. ``--only fig2`` filters."""
+``name,us_per_call,derived`` CSV. ``--only fig2`` filters.
+
+``--backend ref,jnp,pallas`` re-runs the selected figures once per named
+matmul backend (kernels/registry.py); record names are prefixed with the
+backend. The GEMMs in the characterization sweeps (fig2-9, table3, fig16)
+and the model-level figures (fig14, fig15) route through the
+execution-policy layer, so one flag sweeps them across substrates. The
+sparsity-primitive figures (fig10-13) measure pack/prune/ref kernels
+directly and do not vary by backend (see EXPERIMENTS.md). ``--policy``
+pins a full execution policy (e.g. ``fp8:sparse24:pallas``) instead.
+"""
 import argparse
 import importlib
 import sys
@@ -25,28 +35,58 @@ MODULES = [
 ]
 
 
-def main() -> None:
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--only", default=None,
-                    help="substring filter on module names")
-    args = ap.parse_args()
-
-    print("name,us_per_call,derived")
+def _run_modules(only, tag: str) -> int:
     failures = 0
+    prefix = f"{tag}/" if tag else ""
     for name in MODULES:
-        if args.only and args.only not in name:
+        if only and only not in name:
             continue
         t0 = time.time()
         try:
             mod = importlib.import_module(f"benchmarks.{name}")
             for rec in mod.run():
-                print(rec.csv())
-            print(f"# {name}: ok in {time.time() - t0:.1f}s",
+                print(f"{prefix}{rec.csv()}" if prefix else rec.csv())
+            print(f"# {prefix}{name}: ok in {time.time() - t0:.1f}s",
                   file=sys.stderr)
         except Exception as e:  # noqa: BLE001 — report and continue
             failures += 1
-            print(f"{name}/ERROR,0.0,error={type(e).__name__}:{e}")
-            print(f"# {name}: FAILED {e}", file=sys.stderr)
+            print(f"{prefix}{name}/ERROR,0.0,error={type(e).__name__}:{e}")
+            print(f"# {prefix}{name}: FAILED {e}", file=sys.stderr)
+    return failures
+
+
+def main() -> None:
+    from repro.core import execution as ex
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="substring filter on module names")
+    ap.add_argument("--backend", default=None,
+                    help="comma-separated registry backends to sweep "
+                         "(ref,jnp,pallas,pallas_sparse24); each selected "
+                         "figure runs once per backend")
+    ap.add_argument("--policy", default=None,
+                    help="execution-policy spec pinned for the whole run, "
+                         "e.g. 'fp8:sparse24:pallas' (exclusive with "
+                         "--backend sweeps)")
+    args = ap.parse_args()
+    if args.policy and args.backend:
+        ap.error("--policy and --backend are mutually exclusive: a policy "
+                 "names its own backend (add it to the spec, e.g. "
+                 "'fp8:dense:pallas')")
+
+    print("name,us_per_call,derived")
+    failures = 0
+    if args.policy:
+        ex.set_default_policy(ex.parse_policy(args.policy))
+        failures += _run_modules(args.only, args.policy)
+    elif args.backend:
+        backends = [b.strip() for b in args.backend.split(",") if b.strip()]
+        for b in backends:
+            ex.set_default_backend(b)
+            failures += _run_modules(args.only, b)
+    else:
+        failures += _run_modules(args.only, "")
     if failures:
         sys.exit(1)
 

@@ -55,10 +55,12 @@ def _time_fn(fn, *args, iters: int = 5, warmup: int = 2) -> float:
 
 
 def _matmul_fn(dtype):
+    """GEMM under test, routed through the default execution-policy backend
+    (``benchmarks/run.py --backend`` re-targets every sweep through here)."""
+    from repro.core import execution
+
     def f(a, b):
-        return jax.lax.dot_general(
-            a, b, (((1,), (0,)), ((), ())),
-            preferred_element_type=jnp.float32)
+        return execution.raw_matmul(a, b, out_dtype=jnp.float32)
     return jax.jit(f)
 
 
@@ -164,11 +166,10 @@ def latency_probe(tile_shapes: Sequence[Tuple[int, int, int]] = (
         for (m, n, k) in tile_shapes:
 
             def chained(a, b):
+                from repro.core import execution
                 x = a
                 for _ in range(chain):
-                    y = jax.lax.dot_general(
-                        x, b, (((1,), (0,)), ((), ())),
-                        preferred_element_type=jnp.float32)
+                    y = execution.raw_matmul(x, b, out_dtype=jnp.float32)
                     # renormalize + recast: keeps the chain stable and the
                     # dependency real
                     x = (y / jnp.float32(k)).astype(dtype)[:, :k]

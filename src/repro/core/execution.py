@@ -1,0 +1,426 @@
+"""Unified execution-policy layer (paper §9.2 as the default execution path).
+
+The paper's guidance is *contextual*: FP8 wins only above an occupancy
+threshold (§5), queue concurrency collapses fairness past 4–8 streams (§6),
+and 2:4 sparsity is break-even in isolation but pays under memory-bound /
+multi-tenant execution (§7). This module turns that guidance into one
+dispatch seam:
+
+* :class:`ExecutionPolicy` — precision × sparsity × backend × block shapes
+  × stream budget, the single value threaded through models, runtime loops,
+  launchers, and benchmarks.
+* :func:`matmul` — the dispatcher every dense/FP8/2:4 GEMM routes through,
+  resolving against the :mod:`repro.kernels.registry` backends.
+* :func:`resolve_policy` — consults :class:`~repro.core.concurrency.
+  OccupancyAdvisor` with the workload's grid-tile fill at trace time and
+  returns the policy the paper would pick (precision demotion below the
+  FP8 occupancy threshold, sparsity on for multi-tenant/memory-bound,
+  stream caps for latency-sensitive work).
+* :class:`BlockShapeCache` — (M, K, N, dtype)-keyed block-shape autotune
+  cache, seeded from the Table-3 tile-latency findings and refinable from
+  measured ``benchmarks/table3_tile_latency.py`` records.
+
+Echoing AMD's partitioning guide, selection is *explicit placement*, not a
+single-pool default: callers say what they know (shapes, tenancy, latency
+sensitivity) and the policy layer picks the execution mode.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Dict, NamedTuple, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import concurrency as cc
+from repro.kernels import registry
+
+PRECISIONS = ("bf16", "fp8")
+SPARSITIES = ("dense", "sparse24")
+
+# MXU tile edge: one unit of TPU grid parallelism (the wavefront analogue).
+MXU_TILE = 128
+
+
+# ---------------------------------------------------------------------------
+# Packed 2:4 weight (serving representation, consumed by backend.sparse24)
+# ---------------------------------------------------------------------------
+
+class PackedWeight(NamedTuple):
+    """2:4-compressed linear weight: values (K/2, N) + meta (K/8, N) uint8."""
+    values: jax.Array
+    meta: jax.Array
+
+    @property
+    def k(self) -> int:
+        return self.values.shape[0] * 2
+
+    @property
+    def n(self) -> int:
+        return self.values.shape[1]
+
+
+def pack_weight(w: jax.Array) -> PackedWeight:
+    from repro.core import sparsity as sp
+    vals, meta = sp.pack_24(sp.prune_24(w))
+    return PackedWeight(vals, meta)
+
+
+def pack_model_params(params):
+    """Pre-pack every eligible linear weight to :class:`PackedWeight`.
+
+    The serving form of a sparse24 policy: prune+pack **once** at session
+    setup so decode streams packed bytes from HBM (the §7 bandwidth win),
+    instead of re-pruning inside every jitted step. Eligible leaves are the
+    ``dense()``-consumed projections (``w_*`` / ``out_proj``) with a
+    packable contraction dim — 2-D weights and scan-stacked 3-D weights
+    (packed per layer via vmap). Embeddings, the LM head, routers, norms,
+    biases, and 4-D MoE expert stacks are left dense.
+    """
+    from repro.core import sparsity as sp
+
+    def pack2d(w):
+        vals, meta = sp.pack_24(sp.prune_24(w))
+        return vals, meta
+
+    def maybe(key: str, v):
+        if isinstance(v, dict):
+            return {k: maybe(k, vv) for k, vv in v.items()}
+        if not (key.startswith("w_") or key == "out_proj"):
+            return v
+        if not hasattr(v, "ndim") or v.ndim not in (2, 3):
+            return v
+        if v.shape[-2] % 8 or not jnp.issubdtype(v.dtype, jnp.floating):
+            return v
+        vals, meta = pack2d(v) if v.ndim == 2 else jax.vmap(pack2d)(v)
+        return PackedWeight(vals, meta)
+
+    return {k: maybe(k, v) for k, v in params.items()}
+
+
+# ---------------------------------------------------------------------------
+# Policy
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class ExecutionPolicy:
+    """How a matmul (and the workload around it) should execute.
+
+    ``block_m/n/k`` of ``None`` defer to the autotune cache / kernel
+    defaults. ``streams`` is the concurrency budget the policy resolver
+    granted (consumed by serving / benchmark harnesses, not by ``matmul``).
+    """
+    precision: str = "bf16"             # bf16 | fp8
+    sparsity: str = "dense"             # dense | sparse24
+    backend: str = "jnp"                # registry name
+    block_m: Optional[int] = None
+    block_n: Optional[int] = None
+    block_k: Optional[int] = None
+    streams: int = 1
+    rationale: Tuple[str, ...] = ()
+
+    def __post_init__(self):
+        if self.precision not in PRECISIONS:
+            raise ValueError(f"precision {self.precision!r} not in "
+                             f"{PRECISIONS}")
+        if self.sparsity not in SPARSITIES:
+            raise ValueError(f"sparsity {self.sparsity!r} not in "
+                             f"{SPARSITIES}")
+
+    @property
+    def blocks(self) -> Dict[str, Optional[int]]:
+        return {"bm": self.block_m, "bn": self.block_n, "bk": self.block_k}
+
+    def spec(self) -> str:
+        """Compact string form, parseable by :func:`parse_policy`."""
+        return f"{self.precision}:{self.sparsity}:{self.backend}"
+
+    def describe(self) -> str:
+        base = self.spec() + (f" streams={self.streams}")
+        if self.rationale:
+            base += "\n  - " + "\n  - ".join(self.rationale)
+        return base
+
+
+def parse_policy(spec: str, base: Optional[ExecutionPolicy] = None
+                 ) -> ExecutionPolicy:
+    """Parse ``"fp8:sparse24:pallas"``-style specs (parts in any order,
+    any subset): precision, sparsity, backend name, ``NxNxN`` blocks,
+    ``streams=N``."""
+    pol = base or ExecutionPolicy()
+    updates: Dict[str, Any] = {}
+    for tok in filter(None, (t.strip() for t in spec.split(":"))):
+        if tok in PRECISIONS:
+            updates["precision"] = tok
+        elif tok in SPARSITIES:
+            updates["sparsity"] = tok
+        elif tok in registry.available_backends():
+            updates["backend"] = tok
+        elif tok.startswith("streams="):
+            updates["streams"] = int(tok.split("=", 1)[1])
+        elif "x" in tok:
+            bm, bn, bk = (int(v) for v in tok.split("x"))
+            updates.update(block_m=bm, block_n=bn, block_k=bk)
+        else:
+            raise ValueError(
+                f"unrecognized policy token {tok!r} in {spec!r} (want one of "
+                f"{PRECISIONS + SPARSITIES}, a backend "
+                f"{registry.available_backends()}, MxNxK blocks, or "
+                f"streams=N)")
+    return dataclasses.replace(pol, **updates)
+
+
+# Module-level defaults: benchmarks/launchers flip these once instead of
+# threading a policy through every call site.
+_default_policy: Optional[ExecutionPolicy] = None
+_default_backend: str = "jnp"
+
+
+def set_default_policy(policy: Optional[ExecutionPolicy]) -> None:
+    global _default_policy
+    _default_policy = policy
+
+
+def get_default_policy() -> ExecutionPolicy:
+    return _default_policy if _default_policy is not None \
+        else ExecutionPolicy(backend=_default_backend)
+
+
+def set_default_backend(name: str) -> None:
+    registry.get_backend(name)          # validate eagerly
+    global _default_backend
+    _default_backend = name
+
+
+def default_backend() -> str:
+    return _default_backend
+
+
+def policy_from(cfg, rt) -> ExecutionPolicy:
+    """Effective policy for a model call site.
+
+    Precedence: explicit ``rt.policy`` > module default policy > derived
+    from the legacy per-object switches (``cfg.precision``,
+    ``cfg.sparsity_24``, ``rt.use_pallas``) + module default backend.
+    """
+    pol = getattr(rt, "policy", None)
+    if pol is not None:
+        return pol
+    if _default_policy is not None:
+        return _default_policy
+    return ExecutionPolicy(
+        precision=cfg.precision,
+        sparsity="sparse24" if cfg.sparsity_24 else "dense",
+        backend="pallas" if rt.use_pallas else _default_backend)
+
+
+def apply_policy(cfg, rt, policy: ExecutionPolicy):
+    """Fold a policy back into (cfg, rt) so non-matmul consumers (param
+    init, serving weight prep, logging) see consistent switches.
+
+    ``rt.use_pallas`` is deliberately left alone: it additionally gates the
+    flash-attention kernel, which is forward-only — the policy governs the
+    (differentiable) matmul seam, so ``--backend pallas`` stays trainable.
+    """
+    cfg = dataclasses.replace(
+        cfg, precision=policy.precision,
+        sparsity_24=policy.sparsity == "sparse24")
+    rt = dataclasses.replace(rt, policy=policy)
+    return cfg, rt
+
+
+# ---------------------------------------------------------------------------
+# Block-shape autotune cache (Table 3: preferred tile is precision-dependent)
+# ---------------------------------------------------------------------------
+
+def _dtype_key(dtype) -> str:
+    name = jnp.dtype(dtype).name
+    return {"float8_e4m3fn": "fp8", "float8_e5m2": "fp8",
+            "bfloat16": "bf16", "float32": "fp32"}.get(name, name)
+
+
+class BlockShapeCache:
+    """(M, K, N, dtype) → (bm, bn, bk) with best observed latency.
+
+    Seeded with the Table-3 finding — larger tiles pay a per-issue latency
+    premium and the preferred shape is precision-dependent (FP8 wants the
+    deepest K block to amortize its occupancy threshold; bf16 peaks at the
+    square MXU-native tile) — and refined by :meth:`record` whenever a
+    harness measures a (shape, blocks) pair.
+    """
+
+    # Per-precision preferred blocks, from table3_tile_latency: the probe
+    # shapes it sweeps are exactly the kernel-block candidates.
+    TABLE3_PREFERRED: Dict[str, Tuple[int, int, int]] = {
+        "fp8": (256, 256, 512),
+        "bf16": (256, 256, 256),
+        "fp32": (128, 128, 256),
+    }
+    # The Table-3 probe grid itself (m, n, k): candidates for autotuning.
+    TABLE3_SHAPES: Tuple[Tuple[int, int, int], ...] = (
+        (128, 128, 128), (256, 256, 128), (128, 128, 256), (256, 256, 256))
+
+    def __init__(self, seed: bool = True):
+        self._best: Dict[Tuple[int, int, int, str],
+                         Tuple[Tuple[int, int, int], float]] = {}
+        if seed:
+            self.seed_from_table3()
+
+    def seed_from_table3(self) -> None:
+        for prec, blocks in self.TABLE3_PREFERRED.items():
+            for (m, n, k) in self.TABLE3_SHAPES:
+                bm, bn, bk = (min(b, d) for b, d in zip(blocks, (m, n, k)))
+                self._best[(m, k, n, prec)] = ((bm, bn, bk), math.inf)
+
+    def record(self, m: int, k: int, n: int, dtype,
+               blocks: Tuple[int, int, int], seconds: float) -> None:
+        key = (m, k, n, _dtype_key(dtype))
+        cur = self._best.get(key)
+        if cur is None or seconds < cur[1]:
+            self._best[key] = (tuple(blocks), seconds)
+
+    def lookup(self, m: int, k: int, n: int, dtype
+               ) -> Optional[Tuple[Optional[int], ...]]:
+        prec = _dtype_key(dtype)
+        hit = self._best.get((m, k, n, prec))
+        if hit is not None:
+            return hit[0]
+        pref = self.TABLE3_PREFERRED.get(prec)
+        if pref is None:
+            return None
+        # Clamp the precision-preferred blocks to the problem — but a dim
+        # below MXU-lane granularity gets no hint (None → kernel default):
+        # the policy's blocks are stamped onto every GEMM of the workload,
+        # and a sub-8 hint from one tiny dim (e.g. decode slots) would
+        # otherwise force every matmul off the kernel path.
+        clamped = tuple(min(b, d) for b, d in zip(pref, (m, n, k)))
+        return tuple((c if c >= 8 else None) for c in clamped)
+
+    def __len__(self) -> int:
+        return len(self._best)
+
+
+BLOCK_CACHE = BlockShapeCache()
+
+
+def seed_cache_from_records(records: Sequence[Any],
+                            cache: Optional[BlockShapeCache] = None) -> int:
+    """Ingest ``latency_probe`` Records (name ``latency/{prec}/{m}x{n}x{k}``)
+    into the block cache; returns how many were folded in.
+
+    The probe measures per-shape latency, not a block sweep, so the entry
+    keeps the precision-preferred blocks (clamped to the shape) and the
+    record only refreshes the latency evidence for that shape — fabricating
+    a block choice a measurement never exercised would silently override
+    the Table-3 seeding.
+    """
+    cache = cache or BLOCK_CACHE
+    n_in = 0
+    for r in records:
+        parts = r.name.split("/")
+        if len(parts) != 3 or parts[0] != "latency":
+            continue
+        prec = parts[1]
+        m, n, k = (int(v) for v in parts[2].split("x"))
+        dtype = {"fp8": jnp.float8_e4m3fn, "bf16": jnp.bfloat16,
+                 "fp16": jnp.float16, "fp32": jnp.float32}.get(prec)
+        pref = BlockShapeCache.TABLE3_PREFERRED.get(prec)
+        if dtype is None or pref is None:
+            continue
+        blocks = tuple(min(b, d) for b, d in zip(pref, (m, n, k)))
+        cache.record(m, k, n, dtype, blocks, r.us_per_call * 1e-6)
+        n_in += 1
+    return n_in
+
+
+# ---------------------------------------------------------------------------
+# Policy resolver (OccupancyAdvisor at trace time)
+# ---------------------------------------------------------------------------
+
+def grid_tiles(m: int, n: int, tile: int = MXU_TILE) -> int:
+    """MXU-tile fill of an (M, N) output — the TPU 'active wavefronts'."""
+    return max(1, -(-m // tile)) * max(1, -(-n // tile))
+
+
+def resolve_policy(m: int, k: int, n: int, *,
+                   precision: str = "fp8",
+                   backend: Optional[str] = None,
+                   latency_sensitive: bool = False,
+                   tenants: int = 1,
+                   streams: Optional[int] = None,
+                   advisor: Optional[cc.OccupancyAdvisor] = None,
+                   cache: Optional[BlockShapeCache] = None
+                   ) -> ExecutionPolicy:
+    """Pick the execution policy the paper's §9.2 rules would pick.
+
+    ``(m, k, n)`` is the dominant GEMM of the workload (tokens × d_model ×
+    d_ff for an LLM step); the advisor sees its grid-tile fill and may
+    demote FP8 below the occupancy threshold, enable/disable 2:4, and cap
+    the stream count. Explicit ``backend`` wins; otherwise Pallas is chosen
+    whenever the resolved policy needs a technique only the kernels deliver
+    (packed 2:4), else the module default.
+    """
+    advisor = advisor or cc.OccupancyAdvisor()
+    profile = cc.WorkloadProfile(
+        precision=precision,
+        grid_tiles=grid_tiles(m, n),
+        latency_sensitive=latency_sensitive,
+        concurrent_tenants=tenants)
+    advice = advisor.advise(profile)
+
+    sparsity = "sparse24" if advice.use_sparsity and k % 8 == 0 else "dense"
+    chosen_backend = backend if backend is not None else (
+        "pallas_sparse24" if sparsity == "sparse24"
+        and _default_backend.startswith("pallas") else _default_backend)
+    registry.get_backend(chosen_backend)
+
+    dtype = jnp.float8_e4m3fn if advice.suggested_precision == "fp8" \
+        else jnp.bfloat16
+    blocks = (cache or BLOCK_CACHE).lookup(m, k, n, dtype) or (None,) * 3
+
+    n_streams = advice.max_streams if streams is None \
+        else min(streams, advice.max_streams)
+    return ExecutionPolicy(
+        precision=advice.suggested_precision,
+        sparsity=sparsity,
+        backend=chosen_backend,
+        block_m=blocks[0], block_n=blocks[1], block_k=blocks[2],
+        streams=max(1, n_streams),
+        rationale=tuple(advice.rationale))
+
+
+# ---------------------------------------------------------------------------
+# The dispatcher
+# ---------------------------------------------------------------------------
+
+def matmul(x: jax.Array, w, policy: Optional[ExecutionPolicy] = None, *,
+           out_dtype=jnp.bfloat16) -> jax.Array:
+    """``x @ w`` through the policy's backend.
+
+    ``w`` is a dense (K, N) array or a :class:`PackedWeight`; leading dims
+    of ``x`` are preserved. FP8 applies only to 2-D dense weights (batched
+    operands keep their native path, matching the per-call-site behavior
+    this layer replaced).
+    """
+    pol = policy or get_default_policy()
+    be = registry.get_backend(pol.backend)
+    if isinstance(w, PackedWeight):
+        return be.sparse24(x, w.values, w.meta, out_dtype=out_dtype,
+                           **pol.blocks)
+    if pol.precision == "fp8" and w.ndim == 2:
+        return be.fp8(x, w, out_dtype=out_dtype, **pol.blocks)
+    return be.dense(x, w, out_dtype=out_dtype, **pol.blocks)
+
+
+def raw_matmul(a: jax.Array, b: jax.Array, *,
+               backend: Optional[str] = None,
+               out_dtype=jnp.float32) -> jax.Array:
+    """Benchmark-facing dispatch on *already-cast* operands: fp8 operands
+    go through the pre-quantized GEMM entry (unit scales), everything else
+    through ``dense`` — so one ``--backend`` flag re-targets every
+    characterization sweep."""
+    be = registry.get_backend(backend or get_default_policy().backend)
+    if a.dtype in (jnp.float8_e4m3fn, jnp.float8_e5m2):
+        return be.fp8_qdot(a, b, 1.0, 1.0, out_dtype=out_dtype)
+    return be.dense(a, b, out_dtype=out_dtype)

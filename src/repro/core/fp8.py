@@ -112,31 +112,48 @@ def _saturate_cast(x32: jax.Array, scale: jax.Array, dtype) -> jax.Array:
     return jnp.clip(x32 * scale, -fmax, fmax).astype(dtype)
 
 
-@partial(jax.custom_vjp, nondiff_argnums=(4, 5))
+def _quantized_dot(x_q, w_q, x_inv_scale, w_inv_scale, out_dtype, backend):
+    """Route the pre-quantized forward GEMM through the backend registry
+    (lazy import: the registry itself builds on this module)."""
+    from repro.kernels.registry import get_backend
+    return get_backend(backend).fp8_qdot(
+        x_q, w_q, x_inv_scale, w_inv_scale, out_dtype=out_dtype)
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(4, 5, 6))
 def fp8_matmul(x: jax.Array, w: jax.Array,
                x_scale: jax.Array, w_scale: jax.Array,
-               fwd_dtype=E4M3, grad_dtype=E5M2) -> jax.Array:
+               fwd_dtype=E4M3, grad_dtype=E5M2,
+               backend: str = "jnp") -> jax.Array:
     """Differentiable tensor-scaled FP8 matmul.
 
     ``x_scale``/``w_scale`` are scalar (delayed) quantization scales.
     Forward operands use E4M3 (range-narrow, precise); gradients use E5M2
     (range-wide), matching the paper's fp8/bf8 MFMA operand pairs and the
-    standard FP8 training recipe.
+    standard FP8 training recipe. ``backend`` names a registry backend for
+    the forward GEMM; the backward dots stay on the jnp path (E5M2 grads
+    need no kernel and must match cotangent dtypes exactly).
     """
     x_q = _saturate_cast(x.astype(jnp.float32), x_scale, fwd_dtype)
     w_q = _saturate_cast(w.astype(jnp.float32), w_scale, fwd_dtype)
-    return fp8_dot(x_q, w_q, 1.0 / x_scale, 1.0 / w_scale, out_dtype=x.dtype)
+    return _quantized_dot(x_q, w_q, 1.0 / x_scale, 1.0 / w_scale,
+                          x.dtype, backend)
 
 
-def _fp8_matmul_fwd(x, w, x_scale, w_scale, fwd_dtype, grad_dtype):
+def _fp8_matmul_fwd(x, w, x_scale, w_scale, fwd_dtype, grad_dtype, backend):
     x_q = _saturate_cast(x.astype(jnp.float32), x_scale, fwd_dtype)
     w_q = _saturate_cast(w.astype(jnp.float32), w_scale, fwd_dtype)
-    out = fp8_dot(x_q, w_q, 1.0 / x_scale, 1.0 / w_scale, out_dtype=x.dtype)
-    return out, (x_q, w_q, x_scale, w_scale)
+    out = _quantized_dot(x_q, w_q, 1.0 / x_scale, 1.0 / w_scale,
+                         x.dtype, backend)
+    # zero-size dtype tokens so bwd can cast cotangents back to the primal
+    # dtypes (dw must match w.dtype under jax.grad with bf16 params)
+    x_tok = jnp.zeros((), x.dtype)
+    w_tok = jnp.zeros((), w.dtype)
+    return out, (x_q, w_q, x_scale, w_scale, x_tok, w_tok)
 
 
-def _fp8_matmul_bwd(fwd_dtype, grad_dtype, res, g):
-    x_q, w_q, x_s, w_s = res
+def _fp8_matmul_bwd(fwd_dtype, grad_dtype, backend, res, g):
+    x_q, w_q, x_s, w_s, x_tok, w_tok = res
     # Gradient quantization: dynamic (current-tensor) scaling in E5M2.
     g32 = g.astype(jnp.float32)
     g_amax = jnp.maximum(jnp.max(jnp.abs(g32)), 1e-12)
@@ -153,7 +170,7 @@ def _fp8_matmul_bwd(fwd_dtype, grad_dtype, res, g):
         x_q, g_q, ((lead, lead), ((), ())),
         preferred_element_type=jnp.float32)
     dw = dw / (g_scale * x_s)
-    return (dx.astype(g.dtype), dw.astype(jnp.float32),
+    return (dx.astype(x_tok.dtype), dw.astype(w_tok.dtype),
             jnp.zeros_like(x_s), jnp.zeros_like(w_s))
 
 
@@ -166,16 +183,18 @@ fp8_matmul.defvjp(_fp8_matmul_fwd, _fp8_matmul_bwd)
 
 def fp8_linear(x: jax.Array, w: jax.Array, state: Dict[str, TensorScale],
                name: str, history: int = 16,
-               collect: Optional[Dict[str, jax.Array]] = None) -> jax.Array:
+               collect: Optional[Dict[str, jax.Array]] = None,
+               backend: str = "jnp") -> jax.Array:
     """Linear layer in FP8 with delayed scaling.
 
     ``state[name + '/x']`` and ``state[name + '/w']`` are :class:`TensorScale`
     entries. When ``collect`` is given, current amaxes are recorded so the
     train step can produce the next-step state via :func:`fold_amaxes`.
+    ``backend`` routes the forward GEMM through the named registry backend.
     """
     xs = state[f"{name}/x"]
     ws = state[f"{name}/w"]
-    out = fp8_matmul(x, w, xs.scale, ws.scale)
+    out = fp8_matmul(x, w, xs.scale, ws.scale, E4M3, E5M2, backend)
     if collect is not None:
         collect[f"{name}/x"] = current_amax(x)
         collect[f"{name}/w"] = current_amax(w)

@@ -73,7 +73,8 @@ VARIANTS: Dict[str, Variant] = {
 
 
 def run_variant(arch_name: str, shape_name: str, variant_name: str,
-                with_layer: bool = True) -> Dict[str, Any]:
+                with_layer: bool = True,
+                backend: Optional[str] = None) -> Dict[str, Any]:
     var = VARIANTS[variant_name]
     cfg = var.cfg_fn(get_arch(arch_name))
     shape = get_shape(shape_name)
@@ -81,12 +82,19 @@ def run_variant(arch_name: str, shape_name: str, variant_name: str,
     seq_shard = variant_name != "no_seq_shard"
     rt = dr.make_rt(cfg, mesh, shape, seq_shard_acts=seq_shard)
     rt = var.rt_fn(rt)
+    if backend:
+        from repro.core import execution as ex
+        rt = dataclasses.replace(rt, policy=ex.ExecutionPolicy(
+            precision=cfg.precision,
+            sparsity="sparse24" if cfg.sparsity_24 else "dense",
+            backend=backend))
     if var.decode_2d_tp:
         rt = dataclasses.replace(rt, shard_fn=sh.make_shard_fn(
             cfg, mesh, shape, decode_2d_tp=True))
 
     rec: Dict[str, Any] = {"arch": arch_name, "shape": shape_name,
-                           "variant": variant_name, "chips": mesh.size}
+                           "variant": variant_name, "chips": mesh.size,
+                           "backend": backend or "jnp"}
     t0 = time.time()
     lower = {"train": dr.lower_train, "prefill": dr.lower_prefill}.get(
         shape.kind, dr.lower_decode)
@@ -146,10 +154,13 @@ def main():
     ap.add_argument("--shape", required=True)
     ap.add_argument("--variant", required=True,
                     help=",".join(VARIANTS))
+    ap.add_argument("--backend", default=None,
+                    choices=[None, "ref", "jnp", "pallas", "pallas_sparse24"],
+                    help="route every matmul through this registry backend")
     ap.add_argument("--out", default="benchmarks/artifacts/perf.jsonl")
     args = ap.parse_args()
     for v in args.variant.split(","):
-        rec = run_variant(args.arch, args.shape, v)
+        rec = run_variant(args.arch, args.shape, v, backend=args.backend)
         if args.out:
             os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
             with open(args.out, "a") as f:

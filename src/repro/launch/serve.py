@@ -27,11 +27,19 @@ def main():
     ap.add_argument("--max-new", type=int, default=16)
     ap.add_argument("--prompt-len", type=int, default=8)
     ap.add_argument("--precision", default=None, choices=[None, "bf16", "fp8"])
+    ap.add_argument("--backend", default=None,
+                    choices=[None, "ref", "jnp", "pallas", "pallas_sparse24"],
+                    help="matmul backend (kernels/registry.py)")
+    ap.add_argument("--policy", default=None,
+                    help="execution-policy spec ('fp8:sparse24:pallas'), or "
+                         "'auto' to resolve via the occupancy advisor "
+                         "(paper §9.2) from slots/d_model/d_ff")
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
     from repro.configs import get_arch, get_reduced
+    from repro.core import execution as ex
     from repro.models import init_params
     from repro.models.layers import RuntimeCfg
     from repro.runtime.serve_loop import Request, ServeSession
@@ -40,11 +48,24 @@ def main():
     if args.precision:
         cfg = dataclasses.replace(cfg, precision=args.precision)
 
+    policy = None
+    if args.policy == "auto":
+        policy = "auto"        # ServeSession resolves, honoring auto_backend
+    elif args.policy or args.backend:
+        base = ex.ExecutionPolicy(
+            precision=cfg.precision,
+            sparsity="sparse24" if cfg.sparsity_24 else "dense")
+        policy = ex.parse_policy(args.policy or "", base=base)
+        if args.backend:
+            policy = dataclasses.replace(policy, backend=args.backend)
+
     rt = RuntimeCfg(ssm_chunk=32)
     params = init_params(jax.random.PRNGKey(args.seed), cfg)
     sess = ServeSession(params, cfg, batch_slots=args.slots,
                         max_len=args.max_len, rt=rt,
-                        temperature=args.temperature, seed=args.seed)
+                        temperature=args.temperature, seed=args.seed,
+                        policy=policy, auto_backend=args.backend,
+                        verbose_policy=True)
 
     rng = np.random.default_rng(args.seed)
     t0 = time.time()

@@ -33,6 +33,13 @@ def build_argparser():
                          "the identical schedule regardless of --steps)")
     ap.add_argument("--precision", default=None, choices=[None, "bf16", "fp8"])
     ap.add_argument("--sparsity-24", action="store_true")
+    ap.add_argument("--backend", default=None,
+                    choices=[None, "ref", "jnp", "pallas", "pallas_sparse24"],
+                    help="matmul backend (kernels/registry.py); default jnp")
+    ap.add_argument("--policy", default=None,
+                    help="full execution-policy spec, e.g. 'fp8:sparse24:"
+                         "pallas:256x256x128' (overrides --precision/"
+                         "--sparsity-24/--backend pieces it names)")
     ap.add_argument("--grad-compress", default="none",
                     choices=["none", "bf16", "int8_ef"])
     ap.add_argument("--microbatch", type=int, default=0)
@@ -58,11 +65,23 @@ def run_once(args) -> int:
     from repro.runtime import train_loop as tl
     from repro.runtime.fault_tolerance import Heartbeat, StepMonitor
 
+    from repro.core import execution as ex
+
     cfg = get_reduced(args.arch) if args.reduced else get_arch(args.arch)
     if args.precision:
         cfg = dataclasses.replace(cfg, precision=args.precision)
     if args.sparsity_24:
         cfg = dataclasses.replace(cfg, sparsity_24=True)
+
+    policy = None
+    if args.policy or args.backend:
+        base = ex.ExecutionPolicy(
+            precision=cfg.precision,
+            sparsity="sparse24" if cfg.sparsity_24 else "dense")
+        policy = ex.parse_policy(args.policy or "", base=base)
+        if args.backend:
+            policy = dataclasses.replace(policy, backend=args.backend)
+        print(f"[train] execution policy: {policy.spec()}")
 
     rt = RuntimeCfg(chunk_q=min(64, args.seq), chunk_kv=min(64, args.seq),
                     ssm_chunk=32, static_loops=True)
@@ -89,7 +108,7 @@ def run_once(args) -> int:
 
     train_step = jax.jit(tl.make_train_step(
         cfg, opt_cfg, rt, grad_compress=args.grad_compress,
-        microbatch=args.microbatch))
+        microbatch=args.microbatch, policy=policy))
 
     monitor = StepMonitor()
     hb = None

@@ -21,7 +21,7 @@ import jax.numpy as jnp
 
 from repro.configs.base import ArchConfig
 from repro.models.layers import (
-    RuntimeCfg, DEFAULT_RT, apply_rope, dense, shard_tag)
+    RuntimeCfg, DEFAULT_RT, apply_rope, dense, opt_barrier, shard_tag)
 
 NEG_INF = -1e30
 
@@ -111,7 +111,7 @@ def chunked_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
                 if j > j_lo:
                     # sequence the blocks behind the softmax carry so
                     # schedulers don't keep every block's scores live
-                    kj, vj, m = jax.lax.optimization_barrier((kj, vj, m))
+                    kj, vj, m = opt_barrier((kj, vj, m))
                 if rt.remat_blocks:
                     bm, bl, bacc = jax.checkpoint(
                         lambda a, bk, bv, qp=qpos0, kp=j * ck: _attn_block(

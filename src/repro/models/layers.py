@@ -1,25 +1,29 @@
-"""Shared building blocks: norms, RoPE, the precision-routed linear, MLP.
+"""Shared building blocks: norms, RoPE, the policy-routed linear, MLP.
 
 The ``dense()`` primitive is the single place where the paper's two weight
-techniques plug into every architecture:
+techniques plug into every architecture. It resolves an
+:class:`~repro.core.execution.ExecutionPolicy` (precision × sparsity ×
+backend × block shapes) and dispatches through the matmul backend registry:
 
-* ``precision="fp8"``   → tensor-scaled FP8 matmul (core/fp8), FP32 accum.
-* ``sparsity_24=True``  → 2:4 magnitude pruning with straight-through
+* ``precision="fp8"``   → tensor-scaled FP8 matmul, FP32 accumulation.
+* ``sparsity="sparse24"`` → 2:4 magnitude pruning with straight-through
   estimator in training; packed weights (``PackedWeight``) in serving.
+* ``backend`` picks ``ref``/``jnp``/``pallas``/``pallas_sparse24``.
 
 All other call sites are ordinary bf16 matmuls with f32 accumulation.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Dict, NamedTuple, Optional, Tuple
+from typing import Any, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ArchConfig
-from repro.core import fp8 as fp8lib
+from repro.core import execution as ex
 from repro.core import sparsity as sp
+from repro.core.execution import PackedWeight, pack_weight  # re-export
 
 
 # ---------------------------------------------------------------------------
@@ -54,6 +58,10 @@ class RuntimeCfg:
     # GShard one-hot einsum — removes the O(T·gs·k·d) dispatch matmul FLOPs
     # (dominant for fine-grained-expert archs like granite).
     moe_gather_dispatch: bool = False
+    # Explicit execution policy. When set it wins over cfg.precision /
+    # cfg.sparsity_24 / use_pallas for every matmul routed through dense()
+    # (see core/execution.policy_from).
+    policy: Any = None
 
 
 def shard_tag(rt: "RuntimeCfg", x, tag: str):
@@ -62,34 +70,39 @@ def shard_tag(rt: "RuntimeCfg", x, tag: str):
     return rt.shard_fn(tag, x)
 
 
+# ---------------------------------------------------------------------------
+# Differentiable scheduling barrier
+# ---------------------------------------------------------------------------
+
+@jax.custom_vjp
+def opt_barrier(xs):
+    """``jax.lax.optimization_barrier`` made differentiable.
+
+    optimization_barrier_p has no AD rules on this JAX version, which
+    breaks ``jax.grad`` over the chunked model loops. The barrier is a
+    scheduling hint, so the VJP barriers the *cotangents* identically —
+    the backward pass needs the same liveness bound as the forward (each
+    chunk's backward temporaries sequence behind the cotangent carry).
+    """
+    return jax.lax.optimization_barrier(xs)
+
+
+def _opt_barrier_fwd(xs):
+    return jax.lax.optimization_barrier(xs), None
+
+
+def _opt_barrier_bwd(_, g):
+    return (jax.lax.optimization_barrier(g),)
+
+
+opt_barrier.defvjp(_opt_barrier_fwd, _opt_barrier_bwd)
+
+
 DEFAULT_RT = RuntimeCfg()
 
 
 # ---------------------------------------------------------------------------
-# Packed 2:4 weight (serving)
-# ---------------------------------------------------------------------------
-
-class PackedWeight(NamedTuple):
-    """2:4-compressed linear weight: values (K/2, N) + meta (K/8, N) uint8."""
-    values: jax.Array
-    meta: jax.Array
-
-    @property
-    def k(self) -> int:
-        return self.values.shape[0] * 2
-
-    @property
-    def n(self) -> int:
-        return self.values.shape[1]
-
-
-def pack_weight(w: jax.Array) -> PackedWeight:
-    vals, meta = sp.pack_24(sp.prune_24(w))
-    return PackedWeight(vals, meta)
-
-
-# ---------------------------------------------------------------------------
-# The precision-routed linear
+# The policy-routed linear
 # ---------------------------------------------------------------------------
 
 @jax.custom_vjp
@@ -110,31 +123,24 @@ _ste_prune24.defvjp(_ste_fwd, _ste_bwd)
 
 def dense(x: jax.Array, w, cfg: ArchConfig, rt: RuntimeCfg = DEFAULT_RT,
           name: str = "") -> jax.Array:
-    """``x @ w`` routed through the configured technique.
+    """``x @ w`` routed through the resolved execution policy.
 
     ``w`` is a dense (K, N) array or a :class:`PackedWeight` (serving).
+    The STE 2:4 prune (training form of sparsity) happens here — it must
+    wrap the *differentiable* weight before the backend sees it; everything
+    else is the registry's job.
     """
-    if isinstance(w, PackedWeight):
-        if rt.use_pallas:
-            from repro.kernels import ops
-            return ops.sparse24_matmul(x, w.values, w.meta,
-                                       out_dtype=rt.act_dtype)
-        return sp.sparse24_matmul_ref(x, w.values, w.meta,
-                                      out_dtype=rt.act_dtype)
-
-    if cfg.sparsity_24 and w.ndim == 2 and w.shape[0] % 8 == 0:
+    pol = ex.policy_from(cfg, rt)
+    if not isinstance(w, PackedWeight) and pol.sparsity == "sparse24" \
+            and w.ndim == 2 and w.shape[0] % 8 == 0:
         w = _ste_prune24(w)
-
-    if cfg.precision == "fp8" and w.ndim == 2:
-        if rt.use_pallas:
-            from repro.kernels import ops
-            return ops.fp8_matmul_dynamic(x, w, out_dtype=rt.act_dtype)
-        return fp8lib.dynamic_fp8_matmul(x, w, out_dtype=rt.act_dtype)
-
-    acc = jax.lax.dot_general(
-        x, w, (((x.ndim - 1,), (0,)), ((), ())),
-        preferred_element_type=jnp.float32)
-    return acc.astype(rt.act_dtype)
+        if pol.backend == "pallas_sparse24":
+            # the weight is already 2:4 with STE gradients; the backend's
+            # dense entry would re-prune with *masked* gradients (and pay
+            # the pack per call) — the plain pallas dense kernel computes
+            # the identical product with STE-consistent dense grads
+            pol = dataclasses.replace(pol, backend="pallas")
+    return ex.matmul(x, w, pol, out_dtype=rt.act_dtype)
 
 
 def batched_einsum(expr: str, a: jax.Array, b: jax.Array, rt: RuntimeCfg,
@@ -180,11 +186,22 @@ def embed_tokens(tokens: jax.Array, table: jax.Array) -> jax.Array:
     return jnp.take(table, tokens, axis=0)
 
 
-def lm_logits(h: jax.Array, head_w: jax.Array, vocab_size: int) -> jax.Array:
-    """Project to (padded) vocab; mask padding logits to -inf."""
-    logits = jax.lax.dot_general(
-        h, head_w, (((h.ndim - 1,), (0,)), ((), ())),
-        preferred_element_type=jnp.float32)
+def lm_logits(h: jax.Array, head_w: jax.Array, vocab_size: int,
+              policy: Any = None) -> jax.Array:
+    """Project to (padded) vocab; mask padding logits to -inf.
+
+    The head stays in the policy's *dense* path regardless of precision or
+    sparsity (§9.2 mixed-precision guidance: keep the logit projection
+    precise while expert/linear GEMMs run FP8/2:4) — including demoting
+    ``pallas_sparse24``, whose dense entry would otherwise 2:4-prune the
+    vocab projection on the fly."""
+    pol = policy or ex.get_default_policy()
+    backend = "pallas" if pol.backend == "pallas_sparse24" else pol.backend
+    logits = ex.matmul(
+        h, head_w,
+        dataclasses.replace(pol, precision="bf16", sparsity="dense",
+                            backend=backend),
+        out_dtype=jnp.float32)
     vp = head_w.shape[-1]
     if vp != vocab_size:
         mask = jnp.arange(vp) < vocab_size

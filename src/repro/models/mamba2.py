@@ -21,7 +21,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ArchConfig
-from repro.models.layers import RuntimeCfg, DEFAULT_RT, dense, _init
+from repro.models.layers import RuntimeCfg, DEFAULT_RT, dense, opt_barrier, _init
 
 
 def _conv1d_causal(x: jax.Array, w: jax.Array, state=None):
@@ -125,7 +125,7 @@ def _mamba2_block_impl(x: jax.Array, p: Dict[str, jax.Array], cfg: ArchConfig,
             if i:
                 # bound liveness: sequence chunk temporaries behind the
                 # state carry (see attention.py for rationale)
-                xh_i, dt_i, cum_i, B_i, C_i, h = jax.lax.optimization_barrier(
+                xh_i, dt_i, cum_i, B_i, C_i, h = opt_barrier(
                     (xh_i, dt_i, cum_i, B_i, C_i, h))
             yi, h = _ssd_chunk(xh_i, dt_i, cum_i, B_i, C_i, h)
             ys.append(yi)

@@ -143,17 +143,24 @@ def moe_mlp(x: jax.Array, p: Dict[str, jax.Array], cfg: ArchConfig,
     xin = shard_tag(rt, xin, "moe_dispatch")
 
     # expert SwiGLU: (G, E, C, d) x (E, d, f)
+    from repro.core import execution as ex
+    pol = ex.policy_from(cfg, rt)
+
     def edot(a, w):
-        """Per-expert matmul; FP8 routes through per-expert dynamic scaling."""
-        if cfg.precision == "fp8":
-            from repro.core.fp8 import dynamic_fp8_matmul
+        """Per-expert matmul through the registry; FP8 applies per-expert
+        dynamic scaling (one scale per expert weight, matching the paper's
+        per-tensor recipe at expert granularity). bf16 experts also route
+        per-expert when a Pallas backend is selected — otherwise the
+        batched einsum IS the jnp backend and stays fused."""
+        if pol.precision == "fp8" or pol.backend.startswith("pallas"):
             if rt.f32_batched_dots:
                 # CPU execution: unrolled per-expert plain dots (supported)
-                outs = [dynamic_fp8_matmul(a[:, e], w[e], out_dtype=rt.act_dtype)
+                outs = [ex.matmul(a[:, e], w[e], pol, out_dtype=rt.act_dtype)
                         for e in range(w.shape[0])]
                 return jnp.stack(outs, axis=1)
-            return jax.vmap(lambda ai, wi: dynamic_fp8_matmul(
-                ai, wi, out_dtype=rt.act_dtype), in_axes=(1, 0), out_axes=1)(a, w)
+            return jax.vmap(lambda ai, wi: ex.matmul(
+                ai, wi, pol, out_dtype=rt.act_dtype),
+                in_axes=(1, 0), out_axes=1)(a, w)
         return batched_einsum("gecx,exf->gecf", a, w, rt)
 
     gate = edot(xin, p["w_gate"])

@@ -20,7 +20,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ArchConfig
-from repro.models.layers import RuntimeCfg, DEFAULT_RT, dense, shard_tag, _init
+from repro.models.layers import (
+    RuntimeCfg, DEFAULT_RT, dense, opt_barrier, shard_tag, _init)
 
 
 def _token_shift(x: jax.Array, prev: jax.Array = None) -> jax.Array:
@@ -113,7 +114,7 @@ def _rwkv6_block_impl(x: jax.Array, p: Dict[str, jax.Array], cfg: ArchConfig,
             if i:
                 # bound liveness: sequence chunk temporaries behind the
                 # state carry (see attention.py for rationale)
-                ri, ki, vi, wi, S = jax.lax.optimization_barrier(
+                ri, ki, vi, wi, S = opt_barrier(
                     (ri, ki, vi, wi, S))
             yi, S = _wkv_chunk(ri, ki, vi, wi, u, S)
             ys.append(yi)

@@ -25,6 +25,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ArchConfig
+from repro.core import execution as ex
 from repro.models import attention as attn_mod
 from repro.models import mamba2 as m2
 from repro.models import moe as moe_mod
@@ -248,7 +249,8 @@ def forward(params: Params, inputs: jax.Array, cfg: ArchConfig,
     """inputs: (B, S) int tokens or (B, S, d) embeddings.
     Returns (logits (B, S, Vp) f32, aux_loss)."""
     x, aux = forward_hidden(params, inputs, cfg, rt)
-    logits = lm_logits(x, params["head"], cfg.vocab_size)
+    logits = lm_logits(x, params["head"], cfg.vocab_size,
+                       policy=ex.policy_from(cfg, rt))
     return logits, aux
 
 
@@ -276,7 +278,8 @@ def prefill(params: Params, inputs: jax.Array, cfg: ArchConfig,
     x, _, caches, tail_caches = _run_stack(params, x, cfg, rt,
                                            collect_cache=True)
     x = rms_norm(x, params["final_norm"], cfg.norm_eps)
-    logits = lm_logits(x[:, -1], params["head"], cfg.vocab_size)
+    logits = lm_logits(x[:, -1], params["head"], cfg.vocab_size,
+                       policy=ex.policy_from(cfg, rt))
     out_caches = {"layers": caches}
     if tail_caches is not None:
         out_caches["tail"] = tail_caches
@@ -409,7 +412,8 @@ def decode_step(params: Params, tokens: jax.Array, caches: Params, pos,
         new_caches["tail"] = jax.tree.map(lambda *xs: jnp.stack(xs), *tails)
 
     x = rms_norm(x, params["final_norm"], cfg.norm_eps)
-    logits = lm_logits(x[:, 0], params["head"], cfg.vocab_size)
+    logits = lm_logits(x[:, 0], params["head"], cfg.vocab_size,
+                       policy=ex.policy_from(cfg, rt))
     return logits, new_caches
 
 

@@ -17,20 +17,29 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ArchConfig
+from repro.core import execution as ex
 from repro.models import decode_step, init_cache, prefill
 from repro.models.layers import RuntimeCfg, DEFAULT_RT
 
 
-def make_prefill_step(cfg: ArchConfig, rt: RuntimeCfg = DEFAULT_RT):
+def make_prefill_step(cfg: ArchConfig, rt: RuntimeCfg = DEFAULT_RT,
+                      policy: Optional[ex.ExecutionPolicy] = None):
+    if policy is not None:
+        cfg, rt = ex.apply_policy(cfg, rt, policy)
+
     def prefill_step(params, inputs):
         return prefill(params, inputs, cfg, rt)
     return prefill_step
 
 
 def make_serve_step(cfg: ArchConfig, rt: RuntimeCfg = DEFAULT_RT,
-                    temperature: float = 0.0):
+                    temperature: float = 0.0,
+                    policy: Optional[ex.ExecutionPolicy] = None):
     """serve_step(params, tokens (B,1), caches, pos, rng) ->
     (next_tokens (B,1), logits, new_caches)."""
+    if policy is not None:
+        cfg, rt = ex.apply_policy(cfg, rt, policy)
+
     def serve_step(params, tokens, caches, pos, rng):
         logits, new_caches = decode_step(params, tokens, caches, pos, cfg, rt)
         if temperature > 0:
@@ -65,7 +74,27 @@ class ServeSession:
 
     def __init__(self, params, cfg: ArchConfig, *, batch_slots: int,
                  max_len: int, rt: RuntimeCfg = DEFAULT_RT,
-                 temperature: float = 0.0, eos_id: int = -1, seed: int = 0):
+                 temperature: float = 0.0, eos_id: int = -1, seed: int = 0,
+                 policy=None, auto_backend: Optional[str] = None,
+                 verbose_policy: bool = False):
+        if policy == "auto":
+            # paper-§9.2 resolution at session construction: the dominant
+            # decode GEMM is (slots, d_model, d_ff); decode is
+            # latency-sensitive and each slot is a tenant.
+            policy = ex.resolve_policy(
+                batch_slots, cfg.d_model, cfg.d_ff,
+                precision=cfg.precision, latency_sensitive=True,
+                tenants=batch_slots, backend=auto_backend)
+        if policy is not None:
+            cfg, rt = ex.apply_policy(cfg, rt, policy)
+            if policy.sparsity == "sparse24":
+                # serving form of 2:4: prune+pack ONCE here so decode
+                # streams packed weights (the §7 bandwidth win), instead
+                # of re-pruning inside every jitted step
+                params = ex.pack_model_params(params)
+            if verbose_policy:
+                print(f"[serve] policy: {policy.describe()}")
+        self.policy = policy
         self.params = params
         self.cfg = cfg
         self.rt = rt

@@ -14,6 +14,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ArchConfig, RunConfig
+from repro.core import execution as ex
 from repro.models import forward
 from repro.models.transformer import forward_hidden
 from repro.models.layers import RuntimeCfg, DEFAULT_RT, lm_logits
@@ -41,7 +42,8 @@ def cross_entropy(logits: jax.Array, labels: jax.Array,
 
 def chunked_cross_entropy(hidden: jax.Array, head_w: jax.Array,
                           labels: jax.Array, vocab_size: int,
-                          chunk: int = CE_CHUNK) -> jax.Array:
+                          chunk: int = CE_CHUNK,
+                          policy=None) -> jax.Array:
     """Fused head+CE over seq chunks; each chunk rematted so backward
     recomputes its logits instead of keeping them resident."""
     b, s, d = hidden.shape
@@ -49,7 +51,7 @@ def chunked_cross_entropy(hidden: jax.Array, head_w: jax.Array,
     assert s % chunk == 0, (s, chunk)
 
     def one(h_c, l_c):
-        logits = lm_logits(h_c, head_w, vocab_size)
+        logits = lm_logits(h_c, head_w, vocab_size, policy=policy)
         logp = jax.nn.log_softmax(logits, axis=-1)
         ll = jnp.take_along_axis(logp, l_c[..., None], axis=-1)[..., 0]
         return -jnp.sum(ll)
@@ -63,10 +65,12 @@ def chunked_cross_entropy(hidden: jax.Array, head_w: jax.Array,
 
 
 def make_loss_fn(cfg: ArchConfig, rt: RuntimeCfg):
+    pol = ex.policy_from(cfg, rt)
+
     def loss_fn(params, batch):
         hidden, aux = forward_hidden(params, batch["inputs"], cfg, rt)
         ce = chunked_cross_entropy(hidden, params["head"], batch["labels"],
-                                   cfg.vocab_size)
+                                   cfg.vocab_size, policy=pol)
         loss = ce + AUX_LOSS_WEIGHT * aux
         return loss, {"loss": loss, "ce": ce, "aux": aux}
     return loss_fn
@@ -82,13 +86,20 @@ def init_state(params, opt_cfg: adamw.AdamWConfig,
 def make_train_step(cfg: ArchConfig, opt_cfg: adamw.AdamWConfig,
                     rt: RuntimeCfg = DEFAULT_RT,
                     grad_compress: str = "none",
-                    microbatch: int = 0):
+                    microbatch: int = 0,
+                    policy: Optional[ex.ExecutionPolicy] = None):
     """Returns train_step(state, batch) -> (state, metrics).
 
     ``microbatch > 0`` enables gradient accumulation: the global batch is
     split into ``global_batch // microbatch`` sequential chunks (scanned) —
     the activation-memory knob for the big train cells.
+
+    ``policy`` (when given) overrides cfg.precision / cfg.sparsity_24 /
+    rt.use_pallas for every matmul in the step — the one seam for backend
+    sweeps (see core/execution.apply_policy).
     """
+    if policy is not None:
+        cfg, rt = ex.apply_policy(cfg, rt, policy)
     loss_fn = make_loss_fn(cfg, rt)
     grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
 

@@ -1,0 +1,327 @@
+"""Execution-policy layer + matmul backend registry tests.
+
+Backend agreement (ref / jnp / pallas-interpret) for bf16, FP8, and
+2:4-packed inputs, policy resolution against OccupancyAdvisor thresholds,
+policy parsing, and the block-shape autotune cache.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import concurrency as cc
+from repro.core import execution as ex
+from repro.core import sparsity as sp
+from repro.kernels import registry
+
+BACKENDS = ("ref", "jnp", "pallas")
+
+
+def _operands(m=64, k=128, n=256, dtype=jnp.bfloat16):
+    x = jax.random.normal(jax.random.PRNGKey(0), (m, k), jnp.float32)
+    w = jax.random.normal(jax.random.PRNGKey(1), (k, n), jnp.float32)
+    return x.astype(dtype), w.astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Registry basics
+# ---------------------------------------------------------------------------
+
+def test_registry_lists_all_backends():
+    names = registry.available_backends()
+    for want in ("ref", "jnp", "pallas", "pallas_sparse24"):
+        assert want in names
+
+
+def test_unknown_backend_raises_with_available_list():
+    with pytest.raises(KeyError, match="pallas"):
+        registry.get_backend("rocblas")
+
+
+# ---------------------------------------------------------------------------
+# Backend agreement: bf16 dense, FP8, 2:4-packed
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_dense_bf16_matches_f32_oracle(backend):
+    x, w = _operands()
+    out = ex.matmul(x, w, ex.ExecutionPolicy(backend=backend),
+                    out_dtype=jnp.float32)
+    want = x.astype(jnp.float32) @ w.astype(jnp.float32)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=1e-2, atol=1e-2)
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_fp8_backends_agree(backend):
+    x, w = _operands()
+    base = ex.matmul(x, w, ex.ExecutionPolicy(precision="fp8", backend="ref"),
+                     out_dtype=jnp.float32)
+    out = ex.matmul(x, w, ex.ExecutionPolicy(precision="fp8",
+                                             backend=backend),
+                    out_dtype=jnp.float32)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(base),
+                               rtol=2e-2, atol=2e-2)
+    # and within quantization error of the exact product
+    ref = x.astype(jnp.float32) @ w.astype(jnp.float32)
+    rel = float(jnp.linalg.norm(out - ref) / jnp.linalg.norm(ref))
+    assert rel < 0.08, rel
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_sparse24_backends_agree(backend):
+    x, w = _operands()
+    packed = ex.pack_weight(w)
+    base = ex.matmul(x, packed, ex.ExecutionPolicy(backend="ref"),
+                     out_dtype=jnp.float32)
+    out = ex.matmul(x, packed, ex.ExecutionPolicy(backend=backend),
+                    out_dtype=jnp.float32)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(base),
+                               rtol=2e-2, atol=2e-2)
+    # the packed product equals the dense product of the pruned weight
+    w24 = sp.prune_24(w)
+    want = x.astype(jnp.float32) @ w24.astype(jnp.float32)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=2e-2, atol=2e-2)
+
+
+def test_pallas_untileable_shapes_fall_back():
+    # M=30 cannot tile to an 8-multiple block: the pallas backend must
+    # fall back to the jnp path and still be correct.
+    x, w = _operands(m=30, k=56, n=24, dtype=jnp.float32)
+    out = ex.matmul(x, w, ex.ExecutionPolicy(backend="pallas"),
+                    out_dtype=jnp.float32)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(x @ w),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_pallas_sparse24_dense_entry_prunes():
+    x, w = _operands()
+    out = ex.matmul(x, w, ex.ExecutionPolicy(backend="pallas_sparse24"),
+                    out_dtype=jnp.float32)
+    w24 = sp.prune_24(w)
+    want = x.astype(jnp.float32) @ w24.astype(jnp.float32)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=2e-2, atol=2e-2)
+
+
+def test_leading_batch_dims_preserved():
+    x = jax.random.normal(jax.random.PRNGKey(2), (2, 16, 64), jnp.bfloat16)
+    w = jax.random.normal(jax.random.PRNGKey(3), (64, 32), jnp.bfloat16)
+    for backend in BACKENDS:
+        out = ex.matmul(x, w, ex.ExecutionPolicy(backend=backend))
+        assert out.shape == (2, 16, 32), backend
+
+
+# ---------------------------------------------------------------------------
+# resolve_policy ↔ OccupancyAdvisor thresholds
+# ---------------------------------------------------------------------------
+
+def test_resolve_demotes_fp8_below_occupancy_threshold():
+    # 1 MXU tile of output: far below the FP8 occupancy threshold — the
+    # advisor's §9.2 rule demotes to bf16.
+    pol = ex.resolve_policy(128, 512, 128, precision="fp8")
+    assert pol.precision == "bf16"
+    assert any("occupancy" in r or "HBM" in r for r in pol.rationale)
+
+
+def test_resolve_keeps_fp8_when_grid_fills():
+    # 16×16 MXU tiles = 256 = advisor cores: fill 1.0 — fp8 retained
+    # (with a batch-up suggestion, not a demotion).
+    pol = ex.resolve_policy(2048, 4096, 2048, precision="fp8")
+    assert pol.precision == "fp8"
+
+
+def test_resolve_disables_sparsity_for_isolated_compute_bound():
+    pol = ex.resolve_policy(8192, 4096, 8192, precision="fp8", tenants=1)
+    assert pol.sparsity == "dense"
+    assert any("break-even" in r for r in pol.rationale)
+
+
+def test_resolve_enables_sparsity_for_multi_tenant():
+    pol = ex.resolve_policy(8192, 4096, 8192, precision="fp8", tenants=4)
+    assert pol.sparsity == "sparse24"
+
+
+def test_resolve_caps_streams_for_latency_sensitive():
+    lat = ex.resolve_policy(512, 512, 512, latency_sensitive=True,
+                            streams=16)
+    thr = ex.resolve_policy(512, 512, 512, latency_sensitive=False,
+                            streams=16)
+    assert lat.streams <= 4 < thr.streams <= 8
+
+
+def test_resolve_respects_custom_advisor_threshold():
+    # an advisor with tiny core count sees every workload as saturating:
+    # fp8 must never be demoted
+    adv = cc.OccupancyAdvisor(n_cores=1)
+    pol = ex.resolve_policy(128, 512, 128, precision="fp8", advisor=adv)
+    assert pol.precision == "fp8"
+
+
+def test_resolve_picks_table3_seeded_blocks():
+    pol = ex.resolve_policy(2048, 4096, 2048, precision="fp8")
+    assert (pol.block_m, pol.block_n, pol.block_k) == \
+        ex.BlockShapeCache.TABLE3_PREFERRED["fp8"]
+
+
+# ---------------------------------------------------------------------------
+# Policy plumbing
+# ---------------------------------------------------------------------------
+
+def test_parse_policy_roundtrip_and_errors():
+    pol = ex.parse_policy("fp8:sparse24:pallas:streams=4:256x256x128")
+    assert pol.spec() == "fp8:sparse24:pallas"
+    assert pol.streams == 4
+    assert (pol.block_m, pol.block_n, pol.block_k) == (256, 256, 128)
+    assert ex.parse_policy(pol.spec()).spec() == pol.spec()
+    with pytest.raises(ValueError, match="unrecognized"):
+        ex.parse_policy("int4")
+
+
+def test_policy_validates_fields():
+    with pytest.raises(ValueError):
+        ex.ExecutionPolicy(precision="int8")
+    with pytest.raises(ValueError):
+        ex.ExecutionPolicy(sparsity="blocksparse")
+
+
+def test_policy_from_precedence():
+    from repro.configs import PAPER_TRANSFORMER
+    from repro.models.layers import RuntimeCfg
+
+    cfg = PAPER_TRANSFORMER                       # precision="fp8"
+    rt = RuntimeCfg()
+    derived = ex.policy_from(cfg, rt)
+    assert derived.precision == "fp8" and derived.backend == "jnp"
+
+    rt_pallas = dataclasses.replace(rt, use_pallas=True)
+    assert ex.policy_from(cfg, rt_pallas).backend == "pallas"
+
+    explicit = ex.ExecutionPolicy(precision="bf16", backend="ref")
+    rt_pol = dataclasses.replace(rt, policy=explicit)
+    assert ex.policy_from(cfg, rt_pol) is explicit
+
+    ex.set_default_backend("pallas")
+    try:
+        assert ex.policy_from(cfg, rt).backend == "pallas"
+    finally:
+        ex.set_default_backend("jnp")
+
+
+def test_apply_policy_folds_into_cfg_and_rt():
+    from repro.configs import PAPER_TRANSFORMER
+    from repro.models.layers import RuntimeCfg
+
+    pol = ex.ExecutionPolicy(precision="bf16", sparsity="sparse24",
+                             backend="pallas_sparse24")
+    cfg, rt = ex.apply_policy(PAPER_TRANSFORMER, RuntimeCfg(), pol)
+    assert cfg.precision == "bf16" and cfg.sparsity_24
+    assert rt.policy is pol
+    # use_pallas (the flash-attention gate) must NOT be flipped by the
+    # matmul policy — the flash kernel is forward-only
+    assert not rt.use_pallas
+
+
+def test_dense_routes_through_policy():
+    """models.layers.dense honors rt.policy over cfg switches."""
+    from repro.configs import PAPER_TRANSFORMER
+    from repro.models.layers import RuntimeCfg, dense
+
+    x, w = _operands(m=32, k=64, n=64)
+    rt = RuntimeCfg(policy=ex.ExecutionPolicy(precision="bf16",
+                                              backend="ref"))
+    out = dense(x, w, PAPER_TRANSFORMER, rt)      # cfg says fp8; policy wins
+    want = x.astype(jnp.float32) @ w.astype(jnp.float32)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(want), rtol=1e-2, atol=1e-1)
+
+
+def test_pack_model_params_serving_path():
+    """Pre-packed params: eligible projections become PackedWeight, the
+    protected leaves stay dense, and the packed model still decodes."""
+    import dataclasses as dc
+    from repro.configs import PAPER_TRANSFORMER
+    from repro.models import decode_step, init_cache, init_params
+    from repro.models.layers import RuntimeCfg
+
+    cfg = dc.replace(PAPER_TRANSFORMER, num_layers=2, d_model=64, d_ff=128,
+                     num_heads=2, num_kv_heads=2, head_dim=32,
+                     vocab_size=256, precision="bf16")
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    packed = ex.pack_model_params(params)
+
+    w_q = packed["layers"]["b0"]["attn"]["w_q"]
+    assert isinstance(w_q, ex.PackedWeight)
+    assert w_q.values.shape[-2] * 2 == cfg.d_model        # stacked (L, K/2, N)
+    assert not isinstance(packed["embed"], ex.PackedWeight)
+    assert not isinstance(packed["head"], ex.PackedWeight)
+
+    rt = RuntimeCfg(ssm_chunk=16)
+    caches = init_cache(cfg, 2, 16)
+    toks = jnp.zeros((2, 1), jnp.int32)
+    logits, _ = decode_step(packed, toks, caches, 0, cfg, rt)
+    assert logits.shape == (2, cfg.padded_vocab)
+    assert bool(jnp.isfinite(logits).all())
+
+
+# ---------------------------------------------------------------------------
+# Block-shape autotune cache
+# ---------------------------------------------------------------------------
+
+def test_block_cache_seeded_from_table3():
+    cache = ex.BlockShapeCache()
+    assert len(cache) > 0
+    assert cache.lookup(256, 256, 256, jnp.bfloat16) == (256, 256, 256)
+    # fp8 prefers the deepest K block the problem allows
+    assert cache.lookup(256, 256, 256, jnp.float8_e4m3fn) == (256, 256, 256)
+    assert cache.lookup(1024, 4096, 1024, jnp.float8_e4m3fn) == (256, 256, 512)
+
+
+def test_block_cache_record_keeps_best():
+    cache = ex.BlockShapeCache(seed=False)
+    cache.record(512, 512, 512, jnp.bfloat16, (128, 128, 128), 2.0)
+    cache.record(512, 512, 512, jnp.bfloat16, (256, 256, 128), 1.0)
+    cache.record(512, 512, 512, jnp.bfloat16, (64, 64, 64), 3.0)
+    assert cache.lookup(512, 512, 512, jnp.bfloat16) == (256, 256, 128)
+
+
+def test_seed_cache_from_latency_records():
+    from repro.core.characterization import Record
+    cache = ex.BlockShapeCache(seed=False)
+    recs = [Record("latency/fp8/128x128x256", 3.0, {}),
+            Record("occupancy/fp8/tiles=4", 1.0, {})]     # ignored
+    assert ex.seed_cache_from_records(recs, cache) == 1
+    assert cache.lookup(128, 256, 128, jnp.float8_e4m3fn) == (128, 128, 256)
+
+
+# ---------------------------------------------------------------------------
+# Delayed-scaling FP8 training path through the registry
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_fp8_matmul_backend_thread(backend):
+    from repro.core import fp8 as f8
+    x, w = _operands(m=32, k=64, n=64, dtype=jnp.float32)
+    out = f8.fp8_matmul(x, w, jnp.float32(1.0), jnp.float32(1.0),
+                        f8.E4M3, f8.E5M2, backend)
+    ref = f8.fp8_matmul(x, w, jnp.float32(1.0), jnp.float32(1.0))
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-2, atol=2e-2)
+
+
+def test_fp8_matmul_grad_dtype_matches_bf16_params():
+    """Regression: dw must come back in the weight's dtype (bf16), not f32."""
+    from repro.core import fp8 as f8
+    x = jax.random.normal(jax.random.PRNGKey(0), (16, 32), jnp.bfloat16)
+    w = jax.random.normal(jax.random.PRNGKey(1), (32, 8), jnp.bfloat16)
+
+    def loss(x, w):
+        out = f8.fp8_matmul(x, w, jnp.float32(1.0), jnp.float32(1.0))
+        return jnp.sum(out.astype(jnp.float32) ** 2)
+
+    dx, dw = jax.grad(loss, argnums=(0, 1))(x, w)
+    assert dx.dtype == jnp.bfloat16
+    assert dw.dtype == jnp.bfloat16

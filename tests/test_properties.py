@@ -3,6 +3,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+hypothesis = pytest.importorskip("hypothesis")  # not in the CPU CI image
 from hypothesis import given, settings, strategies as st
 
 from repro.core import concurrency as cc
