@@ -1,7 +1,10 @@
 """Fig 5 — overlap efficiency vs fairness across precisions/stream counts.
 
 Paper claim validated: aggregate speedup masks per-stream variance; fairness
-degrades as stream count rises even when overlap efficiency improves."""
+degrades as stream count rises even when overlap efficiency improves.
+``fairness`` follows the paper's [0, 1] convention (clamped; a collapse
+reads 0.0) — ``fairness_raw`` keeps the unbounded diagnostic value and
+``fairness_minmax`` the §7.2 min/max-ratio variant."""
 import jax
 
 from repro.core import concurrency as cc
@@ -24,6 +27,9 @@ def run():
                 name=f"fig5/{prec}/streams={ns}",
                 us_per_call=rep.wall_s * 1e6,
                 derived={"fairness": round(rep.fairness, 4),
+                         "fairness_raw": round(
+                             cc.fairness_raw(rep.per_stream_s), 4),
+                         "fairness_minmax": round(rep.fairness_min_max, 4),
                          "cv": round(rep.cv, 4),
                          "overlap_eff": round(rep.overlap_efficiency, 4),
                          "streams": ns, "precision": prec}))

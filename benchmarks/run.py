@@ -4,7 +4,7 @@
 ``--backend ref,jnp,pallas`` re-runs the selected figures once per named
 matmul backend (kernels/registry.py); record names are prefixed with the
 backend. The GEMMs in the characterization sweeps (fig2-9, table3, fig16)
-and the model-level figures (fig14, fig15) route through the
+and the model-level figures (fig14, fig15, fig17) route through the
 execution-policy layer, so one flag sweeps them across substrates. The
 sparsity-primitive figures (fig10-13) measure pack/prune/ref kernels
 directly and do not vary by backend (see EXPERIMENTS.md). ``--policy``
@@ -31,6 +31,7 @@ MODULES = [
     "fig14_transformer",
     "fig15_concurrent_fp8",
     "fig16_mixed_precision",
+    "fig17_serving_fairness",
     "roofline_report",
 ]
 

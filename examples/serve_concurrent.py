@@ -1,6 +1,8 @@
 """Serve a small model with batched concurrent requests (continuous
-batching), comparing dense vs 2:4-sparse weights and reporting the paper's
-fairness/overlap metrics for the decode streams.
+batching), comparing dense vs 2:4-sparse weights, then run the same
+workload as FOUR TENANTS through the fairness-aware StreamScheduler and
+compare admission policies — the paper's fairness-collapse result (Fig 5)
+reproduced at the serving layer, plus the §9.2 fix.
 
   PYTHONPATH=src python examples/serve_concurrent.py
 """
@@ -14,13 +16,14 @@ from repro.configs import get_reduced
 from repro.core.concurrency import OccupancyAdvisor, WorkloadProfile
 from repro.models import init_params
 from repro.models.layers import RuntimeCfg
+from repro.runtime.scheduler import run_tenants
 from repro.runtime.serve_loop import Request, ServeSession
 
+RT = RuntimeCfg(ssm_chunk=16)
 
-def serve(cfg, label, n_requests=6):
-    params = init_params(jax.random.PRNGKey(0), cfg)
-    sess = ServeSession(params, cfg, batch_slots=4, max_len=96,
-                        rt=RuntimeCfg(ssm_chunk=16))
+
+def serve(cfg, params, label, n_requests=6):
+    sess = ServeSession(params, cfg, batch_slots=4, max_len=96, rt=RT)
     rng = np.random.default_rng(0)
     t0 = time.time()
     for uid in range(n_requests):
@@ -36,8 +39,28 @@ def serve(cfg, label, n_requests=6):
     return toks / dt
 
 
+def multi_tenant(cfg, params, n_tenants=4, reqs_per_tenant=2, slots=2):
+    """Same total workload, three admission policies: fifo collapses
+    per-tenant fairness (the paper's shared-queue result), fair_quantum
+    restores it."""
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(0, cfg.vocab_size, 4).astype(np.int32)
+               for _ in range(reqs_per_tenant)]
+    for admission in ("fifo", "round_robin", "fair_quantum"):
+        sess = ServeSession(params, cfg, batch_slots=slots, max_len=96,
+                            rt=RT)
+        workloads = {
+            f"tenant{i}": [Request(uid=i * 100 + j, prompt=p.copy(),
+                                   max_new=8)
+                           for j, p in enumerate(prompts)]
+            for i in range(n_tenants)}
+        rep = run_tenants(sess, workloads, admission=admission)
+        print(rep.summary())
+
+
 def main():
     base = get_reduced("llama3-8b")
+    params = init_params(jax.random.PRNGKey(0), base)
 
     # paper §9.2: ask the advisor whether to enable sparsity for this context
     advisor = OccupancyAdvisor(n_cores=1)   # CPU demo: 1 "core"
@@ -46,10 +69,14 @@ def main():
         concurrent_tenants=4))
     print("[advisor]", "; ".join(advice.rationale))
 
-    serve(base, "dense")
+    serve(base, params, "dense")
     if advice.use_sparsity:
         sparse_cfg = dataclasses.replace(base, sparsity_24=True)
-        serve(sparse_cfg, "2:4-sparse")
+        serve(sparse_cfg, init_params(jax.random.PRNGKey(0), sparse_cfg),
+              "2:4-sparse")
+
+    print("\n-- multi-tenant admission policies (4 tenants, 2 slots) --")
+    multi_tenant(base, params)
 
 
 if __name__ == "__main__":

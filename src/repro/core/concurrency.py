@@ -32,12 +32,25 @@ import numpy as np
 # Metrics (paper §4.2)
 # ---------------------------------------------------------------------------
 
-def fairness(times: Sequence[float]) -> float:
-    """1 - (t_max - t_min)/t_mean ∈ (-inf, 1]; 1.0 = perfectly balanced."""
+def fairness_raw(times: Sequence[float]) -> float:
+    """Unclamped 1 - (t_max - t_min)/t_mean ∈ (-inf, 1]. Diagnostic only:
+    below 0 the spread exceeds the mean and the magnitude is not
+    interpretable as a fairness level."""
     t = np.asarray(times, dtype=np.float64)
     if t.size == 0 or t.mean() == 0:
         return 1.0
     return float(1.0 - (t.max() - t.min()) / t.mean())
+
+
+def fairness(times: Sequence[float]) -> float:
+    """1 - (t_max - t_min)/t_mean clamped to [0, 1].
+
+    Paper convention: the fairness index is reported in [0, 1] (Fig 5:
+    0.016–0.138 at 8 streams), 1.0 = perfectly balanced, 0.0 = fully
+    collapsed. The raw expression goes arbitrarily negative for skewed
+    streams (spread > mean), which is meaningless as a *level* — use
+    :func:`fairness_raw` when the unbounded value is wanted."""
+    return max(0.0, fairness_raw(times))
 
 
 def fairness_min_max(times: Sequence[float]) -> float:
@@ -53,6 +66,16 @@ def cv(times: Sequence[float]) -> float:
     if t.size == 0 or t.mean() == 0:
         return 0.0
     return float(t.std() / t.mean())
+
+
+def latency_percentiles(times: Sequence[float],
+                        ps: Sequence[int] = (50, 99)) -> Dict[str, float]:
+    """{"p50": ..., "p99": ...} over a latency sample (paper Fig 8's
+    per-stream distribution view); zeros when the sample is empty."""
+    t = np.asarray(times, dtype=np.float64)
+    if t.size == 0:
+        return {f"p{p}": 0.0 for p in ps}
+    return {f"p{p}": float(np.percentile(t, p)) for p in ps}
 
 
 def overlap_efficiency(serial_total: float, concurrent_total: float,
@@ -136,8 +159,12 @@ def characterize_streams(make_thunk: Callable[[int], Callable[[], Any]],
                          mode: str = "async") -> StreamReport:
     """Run the paper's Fig-4/5 experiment for one stream count."""
     thunks = [make_thunk(i) for i in range(n_streams)]
+    # warm EVERY thunk: each stream may be a distinct jitted computation
+    # (or a distinct shape), and any compilation left for the timed region
+    # lands on the early streams and inflates their times.
     for _ in range(warmup):
-        _block(thunks[0]())
+        for fn in thunks:
+            _block(fn())
 
     serial_times = run_serial(thunks)
     serial_total = sum(serial_times)

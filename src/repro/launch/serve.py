@@ -2,10 +2,14 @@
 
 CPU-runnable with ``--reduced``; demonstrates the paper-§9.2 serving levers:
 FP8 weights, 2:4-packed weights (bandwidth win in the memory-bound decode
-regime), batch-slot occupancy.
+regime), batch-slot occupancy — and, with ``--tenants N``, the fairness-
+aware multi-tenant scheduler (runtime/scheduler.py) with its per-tenant
+fairness/CV/p50/p99 report.
 
   PYTHONPATH=src python -m repro.launch.serve --arch llama3-8b --reduced \
       --requests 8 --max-new 16 --precision fp8
+  PYTHONPATH=src python -m repro.launch.serve --arch llama3-8b --reduced \
+      --requests 8 --tenants 4 --admission fair_quantum
 """
 from __future__ import annotations
 
@@ -36,6 +40,13 @@ def main():
                          "(paper §9.2) from slots/d_model/d_ff")
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--tenants", type=int, default=1,
+                    help="number of tenant queues; >1 routes through the "
+                         "fairness-aware StreamScheduler "
+                         "(runtime/scheduler.py)")
+    ap.add_argument("--admission", default="fair_quantum",
+                    choices=["fifo", "round_robin", "fair_quantum"],
+                    help="multi-tenant admission policy (with --tenants)")
     args = ap.parse_args()
 
     from repro.configs import get_arch, get_reduced
@@ -43,6 +54,7 @@ def main():
     from repro.models import init_params
     from repro.models.layers import RuntimeCfg
     from repro.runtime.serve_loop import Request, ServeSession
+    from repro.runtime.scheduler import StreamScheduler
 
     cfg = get_reduced(args.arch) if args.reduced else get_arch(args.arch)
     if args.precision:
@@ -69,11 +81,35 @@ def main():
 
     rng = np.random.default_rng(args.seed)
     t0 = time.time()
+    requests = []
     for uid in range(args.requests):
         prompt = rng.integers(0, cfg.vocab_size,
                               size=(args.prompt_len,)).astype(np.int32)
-        sess.submit(Request(uid=uid, prompt=prompt, max_new=args.max_new))
-    done = sess.run()
+        requests.append(Request(uid=uid, prompt=prompt,
+                                max_new=args.max_new))
+
+    if args.tenants > 1:
+        # multi-tenant: requests dealt round-robin over tenant queues. The
+        # session policy becomes each tenant's slot quota only when its
+        # stream budget was actually chosen (advisor-resolved via 'auto',
+        # or an explicit streams= token) — a policy built just to pick a
+        # backend carries the default streams=1 and would silently cap
+        # every tenant to one slot.
+        sched = StreamScheduler(sess, admission=args.admission)
+        tpol = None
+        if isinstance(sess.policy, ex.ExecutionPolicy) and (
+                args.policy == "auto" or "streams=" in (args.policy or "")):
+            tpol = sess.policy
+        for i in range(args.tenants):
+            sched.add_tenant(f"tenant{i}", policy=tpol)
+        for uid, req in enumerate(requests):
+            sched.submit(f"tenant{uid % args.tenants}", req)
+        done = sched.run()
+        print(sched.report().summary())
+    else:
+        for req in requests:
+            sess.submit(req)
+        done = sess.run()
     dt = time.time() - t0
     total_new = sum(len(r.out) for r in done)
     print(f"[serve] {len(done)}/{args.requests} requests, "

@@ -167,12 +167,16 @@ def _apply_block(kind: str, x, p: Params, cfg: ArchConfig, rt: RuntimeCfg,
 
 
 def _kv_to_cache(k: jax.Array, v: jax.Array, window: int) -> Params:
-    """Build a decode cache from prefill K/V (B, S, kv, hd)."""
+    """Build a decode cache from prefill K/V (B, S, kv, hd).
+
+    The ``pos`` buffer is per-sequence (B, S): continuous-batching slots
+    advance independently, so each row tracks its own written positions.
+    """
     b, s, kvh, hd = k.shape
     if not window or s < window:
         pos = jnp.arange(s, dtype=jnp.int32)
         return {"k": k, "v": v,
-                "pos": jnp.broadcast_to(pos, (s,))}
+                "pos": jnp.broadcast_to(pos, (b, s))}
     # rolling window cache: slot j holds the token p in [s-window, s) with
     # p % window == j (so decode can keep writing at pos % window).
     p = jnp.arange(s - window, s, dtype=jnp.int32)
@@ -182,7 +186,7 @@ def _kv_to_cache(k: jax.Array, v: jax.Array, window: int) -> Params:
     vc = jnp.zeros((b, window, kvh, hd), v.dtype).at[:, slots].set(
         v[:, s - window:])
     posc = jnp.zeros((window,), jnp.int32).at[slots].set(p)
-    return {"k": kc, "v": vc, "pos": posc}
+    return {"k": kc, "v": vc, "pos": jnp.broadcast_to(posc, (b, window))}
 
 
 # ---------------------------------------------------------------------------
@@ -336,12 +340,14 @@ def _decode_attn(x, p, cache, pos, cfg: ArchConfig, rt: RuntimeCfg,
     b = x.shape[0]
     h, kvh, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
     g = h // kvh
-    positions = jnp.full((1,), pos)
+    # ``pos`` may be a scalar (lockstep decode) or (B,) — continuous
+    # batching tracks an independent position per slot.
+    posb = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (b,))
     q = dense(x, p["w_q"], cfg, rt, "q").reshape(b, 1, h, hd)
     k = dense(x, p["w_k"], cfg, rt, "k").reshape(b, 1, kvh, hd)
     v = dense(x, p["w_v"], cfg, rt, "v").reshape(b, 1, kvh, hd)
-    q = attn_mod.apply_rope(q, positions, cfg.rope_theta)
-    k = attn_mod.apply_rope(k, positions, cfg.rope_theta)
+    q = attn_mod.apply_rope(q, posb[:, None], cfg.rope_theta)
+    k = attn_mod.apply_rope(k, posb[:, None], cfg.rope_theta)
     # flash-decoding sharding: q is tiny — replicate it over "model" so the
     # seq-sharded cache is contracted IN PLACE (partial scores + psum of the
     # (b, h, hd) output) instead of GSPMD all-gathering the whole cache to
@@ -349,11 +355,12 @@ def _decode_attn(x, p, cache, pos, cfg: ArchConfig, rt: RuntimeCfg,
     q = shard_tag(rt, q, "decode_q")
 
     kc, vc, posc = cache["k"], cache["v"], cache["pos"]
-    slot = pos % kc.shape[1] if window else pos
-    kc = jax.lax.dynamic_update_slice_in_dim(kc, k.astype(kc.dtype), slot, 1)
-    vc = jax.lax.dynamic_update_slice_in_dim(vc, v.astype(vc.dtype), slot, 1)
-    posc = jax.lax.dynamic_update_slice_in_dim(
-        posc, jnp.asarray([pos], posc.dtype), slot, 0)
+    smax = kc.shape[1]
+    slot = posb % smax if window else posb              # (b,) write rows
+    bidx = jnp.arange(b)
+    kc = kc.at[bidx, slot].set(k[:, 0].astype(kc.dtype))
+    vc = vc.at[bidx, slot].set(v[:, 0].astype(vc.dtype))
+    posc = posc.at[bidx, slot].set(posb)
 
     scale = hd ** -0.5
     # GQA kept grouped: (b, 1, kv, g, hd) × (b, s, kv, hd) — no broadcast
@@ -361,12 +368,14 @@ def _decode_attn(x, p, cache, pos, cfg: ArchConfig, rt: RuntimeCfg,
     q5 = q.reshape(b, kvh, g, hd)
     s = batched_einsum("bkgd,bskd->bkgs", q5, kc, rt,
                        out_dtype=jnp.float32) * scale     # (b, kv, g, s)
-    valid = (posc >= 0) & (posc <= pos)      # posc=-1 marks unwritten slots
+    # posc=-1 marks unwritten (or freed-slot) rows; each slot only attends
+    # to rows its own occupant wrote at positions <= its own pos.
+    valid = (posc >= 0) & (posc <= posb[:, None])        # (b, smax)
     if window:
-        valid &= posc > pos - window
+        valid &= posc > posb[:, None] - window
     else:
-        valid &= jnp.arange(kc.shape[1]) <= pos
-    s = jnp.where(valid[None, None, None, :], s, attn_mod.NEG_INF)
+        valid &= jnp.arange(smax)[None, :] <= posb[:, None]
+    s = jnp.where(valid[:, None, None, :], s, attn_mod.NEG_INF)
     pr = jax.nn.softmax(s, axis=-1)
     o = batched_einsum("bkgs,bskd->bkgd", pr.astype(vc.dtype), vc, rt,
                        out_dtype=jnp.float32)
@@ -377,9 +386,10 @@ def _decode_attn(x, p, cache, pos, cfg: ArchConfig, rt: RuntimeCfg,
 
 def decode_step(params: Params, tokens: jax.Array, caches: Params, pos,
                 cfg: ArchConfig, rt: RuntimeCfg = DEFAULT_RT):
-    """One decoding step. tokens: (B, 1) int32; pos: scalar int32 (same for
-    all sequences — continuous-batching variants pass per-seq offsets at the
-    serving layer). Returns (logits (B, Vp) f32, new_caches)."""
+    """One decoding step. tokens: (B, 1) int32; pos: scalar int32 (lockstep
+    — same position for all sequences) or (B,) int32 (continuous batching —
+    each slot decodes at its own position; see runtime/serve_loop.py).
+    Returns (logits (B, Vp) f32, new_caches)."""
     x = embed_tokens(tokens, params["embed"]).astype(rt.act_dtype)
     shared = params.get("shared_attn")
     pat = cfg.superlayer_pattern
@@ -427,13 +437,13 @@ def _block_cache(kind: str, batch: int, max_len: int, cfg: ArchConfig,
         kvh, hd = cfg.num_kv_heads, cfg.head_dim
         return {"k": jnp.zeros((batch, max_len, kvh, hd), dtype),
                 "v": jnp.zeros((batch, max_len, kvh, hd), dtype),
-                "pos": jnp.full((max_len,), -1, jnp.int32)}
+                "pos": jnp.full((batch, max_len), -1, jnp.int32)}
     if kind == "attn_local":
         w = min(cfg.window_size, max_len)
         kvh, hd = cfg.num_kv_heads, cfg.head_dim
         return {"k": jnp.zeros((batch, w, kvh, hd), dtype),
                 "v": jnp.zeros((batch, w, kvh, hd), dtype),
-                "pos": jnp.full((w,), -1, jnp.int32)}
+                "pos": jnp.full((batch, w), -1, jnp.int32)}
     if kind == "mamba2":
         h, conv = m2.init_mamba2_state(batch, cfg)
         return {"h": h, "conv": conv}

@@ -4,12 +4,18 @@
 dry-run lowers for the ``decode_*``/``prefill_*`` shapes. ``ServeSession``
 implements paper-§9.2-style continuous batching on top ("vLLM-style,
 requires ≥32 concurrent users" — the occupancy lever for FP8 serving):
-requests join/leave slots between steps, each slot tracks its own length,
-and FP8/2:4 weight compression applies per the configured policy.
+requests join/leave slots between steps, each slot advances at its own
+position, and FP8/2:4 weight compression applies per the configured policy.
+
+Multi-tenant admission/fairness policy lives one layer up in
+:mod:`repro.runtime.scheduler`; this module owns the slot mechanics it
+builds on (``admit`` / ``decode_once`` / ``free_slot``).
 """
 from __future__ import annotations
 
 import dataclasses
+import functools
+import time
 from typing import Any, Callable, Dict, List, Optional, Tuple
 
 import jax
@@ -36,7 +42,8 @@ def make_serve_step(cfg: ArchConfig, rt: RuntimeCfg = DEFAULT_RT,
                     temperature: float = 0.0,
                     policy: Optional[ex.ExecutionPolicy] = None):
     """serve_step(params, tokens (B,1), caches, pos, rng) ->
-    (next_tokens (B,1), logits, new_caches)."""
+    (next_tokens (B,1), logits, new_caches). ``pos`` is a scalar (lockstep)
+    or a (B,) vector (continuous batching: per-slot positions)."""
     if policy is not None:
         cfg, rt = ex.apply_policy(cfg, rt, policy)
 
@@ -61,15 +68,98 @@ class Request:
     max_new: int
     out: List[int] = dataclasses.field(default_factory=list)
     done: bool = False
+    # Telemetry (filled by ServeSession/StreamScheduler; wall-clock seconds
+    # from perf_counter, step indices in scheduler virtual time).
+    tenant: Optional[str] = None
+    submit_t: float = 0.0
+    admit_t: float = 0.0
+    finish_t: float = 0.0
+    submit_step: int = -1
+    admit_step: int = -1
+    finish_step: int = -1
+
+    @property
+    def latency_s(self) -> float:
+        return max(0.0, self.finish_t - self.submit_t)
+
+    @property
+    def queue_wait_s(self) -> float:
+        return max(0.0, self.admit_t - self.submit_t)
+
+
+# Jitted step cache: sessions sharing (cfg, rt, temperature) share the
+# compiled serve/prefill functions instead of re-tracing per session (the
+# scheduler tests spin up many short-lived sessions over one tiny model).
+_JIT_CACHE: Dict[Any, Any] = {}
+
+
+def _cached_jit(kind: str, maker: Callable[[], Callable], *key_parts):
+    try:
+        key = (kind,) + key_parts
+        hash(key)
+    except TypeError:                 # unhashable cfg/rt (e.g. shard_fn)
+        return jax.jit(maker())
+    fn = _JIT_CACHE.get(key)
+    if fn is None:
+        fn = _JIT_CACHE[key] = jax.jit(maker())
+    return fn
+
+
+# Cache-leaf classification for slot writes: attention leaves are row-per-
+# position (axis 2 after the layer-stack dim), state leaves (mamba2 h/conv,
+# rwkv6 S/prev_*) are whole-slot values. (rwkv6's "S" is uppercase — no
+# collision with the attention keys.)
+_SEQ_LEAVES = ("k", "v", "pos")
+
+
+def _leaf_key(path) -> str:
+    last = path[-1]
+    return str(getattr(last, "key", getattr(last, "idx", "")))
+
+
+@functools.partial(jax.jit, donate_argnums=(0,))
+def _write_slot_cache(full, new, slot):
+    """Insert a batch-1 prefill cache into ``slot`` of a batched session
+    cache: k/v/pos write their first S rows (the prompt's positions), state
+    leaves replace the slot wholesale. Jitted with the session cache
+    donated so the update happens in place instead of copying every cache
+    leaf per admission."""
+    def write(path, f, n):
+        row = n[:, 0]                             # drop the batch-1 dim
+        if _leaf_key(path) in _SEQ_LEAVES:
+            s = row.shape[1]
+            return f.at[:, slot, :s].set(row.astype(f.dtype))
+        return f.at[:, slot].set(row.astype(f.dtype))
+    return jax.tree_util.tree_map_with_path(write, full, new)
+
+
+@functools.partial(jax.jit, donate_argnums=(0,))
+def _clear_slot_cache(caches, slot):
+    """Reset ``slot`` to its init_cache state: k/v zeroed, pos rows -1
+    (the decode mask treats them as unwritten), SSM/linear-attention state
+    zeroed. A freed slot keeps NOTHING of its previous occupant — slot
+    reuse must never attend to stale keys/values. Jitted + donated like
+    :func:`_write_slot_cache` (slot free is on the serving hot path)."""
+    def clear(path, f):
+        if _leaf_key(path) == "pos":
+            return f.at[:, slot].set(-1)
+        return f.at[:, slot].set(jnp.zeros((), f.dtype))
+    return jax.tree_util.tree_map_with_path(clear, caches)
 
 
 class ServeSession:
     """Fixed-slot continuous batching over a single shared KV cache.
 
-    Slots run in lockstep positions (one global ``pos`` per step — each
-    slot's own start offset is tracked so shorter requests simply mask).
-    This is intentionally the simple production-shaped version: slot join =
-    per-slot prefill write, slot leave = slot freed at EOS/max_new.
+    Each slot advances at its OWN position (``decode_step`` takes a (B,)
+    position vector): admission is one bulk prefill (``make_prefill_step``)
+    written into the slot's cache rows — active slots are untouched and
+    lose no output — and a freed slot's cache rows are cleared before
+    reuse. The first generated token is sampled from the prefill logits,
+    so admission itself emits output token #1.
+
+    ``submit``/``step``/``run`` drive a single FIFO queue; the multi-tenant
+    scheduler (:mod:`repro.runtime.scheduler`) instead calls the slot-level
+    API directly: ``has_free_slot`` → ``admit(req)`` → ``decode_once()``.
     """
 
     def __init__(self, params, cfg: ArchConfig, *, batch_slots: int,
@@ -98,69 +188,121 @@ class ServeSession:
         self.params = params
         self.cfg = cfg
         self.rt = rt
+        self.batch_slots = batch_slots
         self.max_len = max_len
         self.eos_id = eos_id
+        self.temperature = temperature
         self.slots: List[Optional[Request]] = [None] * batch_slots
         self.caches = init_cache(cfg, batch_slots, max_len)
-        self.pos = 0
-        self.step_fn = jax.jit(make_serve_step(cfg, rt, temperature))
+        # next write position per slot (slot-local: every request starts
+        # at position 0 regardless of when it was admitted)
+        self.slot_pos = np.zeros((batch_slots,), np.int32)
+        # The ambient default policy/backend is resolved at trace time by
+        # dense() whenever rt.policy is unset, so it must be part of the
+        # cache key — a --backend sweep flips it between sessions.
+        ambient = ex.get_default_policy()
+        self.step_fn = _cached_jit(
+            "serve", lambda: make_serve_step(cfg, rt, temperature),
+            cfg, rt, temperature, ambient)
+        self.prefill_fn = _cached_jit(
+            "prefill", lambda: make_prefill_step(cfg, rt), cfg, rt, ambient)
         self.rng = jax.random.PRNGKey(seed)
         self.tokens = jnp.zeros((batch_slots, 1), jnp.int32)
         self.queue: List[Request] = []
         self.completed: List[Request] = []
 
-    # -- request lifecycle -------------------------------------------------
-    def submit(self, req: Request):
-        self.queue.append(req)
+    # -- slot-level API (used by the scheduler) ----------------------------
+    @property
+    def n_active(self) -> int:
+        return sum(s is not None for s in self.slots)
 
-    def _admit(self):
-        for i, slot in enumerate(self.slots):
-            if slot is None and self.queue:
-                req = self.queue.pop(0)
-                self.slots[i] = req
-                # feed prompt tokens one at a time from current pos (simple
-                # token-by-token prefill keeps one jitted step; bulk prefill
-                # is the make_prefill_step path used by the examples)
-                toks = self.tokens
-                for t in req.prompt:
-                    toks = toks.at[i, 0].set(int(t))
-                    self.tokens = toks
-                    self._step_single()
-                req._start = self.pos
+    def has_free_slot(self) -> bool:
+        return any(s is None for s in self.slots)
 
-    def _step_single(self):
+    def admit(self, req: Request) -> int:
+        """Bulk-prefill ``req`` into a free slot and sample its first
+        output token from the prefill logits. Active slots do not step —
+        admission can never drop another request's tokens. Returns the
+        slot index (the request may already be done if ``max_new == 1``)."""
+        slot = next((i for i, s in enumerate(self.slots) if s is None), None)
+        if slot is None:
+            raise RuntimeError("admit() with no free slot")
+        lp = len(req.prompt)
+        if not 0 < lp < self.max_len:
+            raise ValueError(f"prompt length {lp} not in [1, {self.max_len})")
+        prompt = jnp.asarray(np.asarray(req.prompt, np.int32))[None, :]
+        logits, pcaches = self.prefill_fn(self.params, prompt)
+        self.caches = _write_slot_cache(self.caches, pcaches, slot)
+        if self.temperature > 0:
+            self.rng, sub = jax.random.split(self.rng)
+            tok = int(jax.random.categorical(
+                sub, logits[0] / self.temperature))
+        else:
+            tok = int(jnp.argmax(logits[0]))
+        self.slots[slot] = req
+        self.slot_pos[slot] = lp
+        self.tokens = self.tokens.at[slot, 0].set(tok)
+        req.admit_t = time.perf_counter()
+        req.out.append(tok)
+        self._maybe_finish(slot, tok)
+        return slot
+
+    def free_slot(self, slot: int):
+        self.slots[slot] = None
+        self.slot_pos[slot] = 0
+        self.caches = _clear_slot_cache(self.caches, slot)
+        self.tokens = self.tokens.at[slot, 0].set(0)
+
+    def decode_once(self) -> List[Request]:
+        """One decode step over the active slots (no admission); returns
+        the requests that completed this step."""
+        if self.n_active == 0:
+            return []
         self.rng, sub = jax.random.split(self.rng)
         nxt, _, self.caches = self.step_fn(
-            self.params, self.tokens, self.caches, self.pos, sub)
-        self.pos += 1
-        self.tokens = nxt
-
-    def step(self):
-        """One decode step for all active slots."""
-        self._admit()
-        if all(s is None for s in self.slots):
-            return
-        self.rng, sub = jax.random.split(self.rng)
-        nxt, _, self.caches = self.step_fn(
-            self.params, self.tokens, self.caches, self.pos, sub)
-        self.pos += 1
+            self.params, self.tokens, self.caches,
+            jnp.asarray(self.slot_pos), sub)
         nxt_np = np.asarray(nxt[:, 0])
         self.tokens = nxt
+        done = []
         for i, req in enumerate(self.slots):
             if req is None:
                 continue
+            self.slot_pos[i] += 1
             tok = int(nxt_np[i])
             req.out.append(tok)
-            if tok == self.eos_id or len(req.out) >= req.max_new \
-                    or self.pos >= self.max_len:
-                req.done = True
-                self.completed.append(req)
-                self.slots[i] = None
+            if self._maybe_finish(i, tok):
+                done.append(req)
+        return done
+
+    def _maybe_finish(self, slot: int, tok: int) -> bool:
+        req = self.slots[slot]
+        if tok == self.eos_id or len(req.out) >= req.max_new \
+                or self.slot_pos[slot] >= self.max_len:
+            req.done = True
+            req.finish_t = time.perf_counter()
+            self.completed.append(req)
+            self.free_slot(slot)
+            return True
+        return False
+
+    # -- single-queue request lifecycle ------------------------------------
+    def submit(self, req: Request):
+        req.submit_t = time.perf_counter()
+        self.queue.append(req)
+
+    def _admit_from_queue(self):
+        while self.queue and self.has_free_slot():
+            self.admit(self.queue.pop(0))
+
+    def step(self):
+        """Admit what fits, then one decode step for all active slots."""
+        self._admit_from_queue()
+        return self.decode_once()
 
     def run(self, max_steps: int = 10_000):
         steps = 0
-        while (self.queue or any(s is not None for s in self.slots)) \
-                and steps < max_steps and self.pos < self.max_len - 1:
+        while (self.queue or self.n_active) and steps < max_steps:
             self.step()
             steps += 1
         return self.completed

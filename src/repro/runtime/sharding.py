@@ -173,8 +173,8 @@ def cache_specs(cfg: ArchConfig, shape: ShapeConfig, mesh: Mesh,
         if name in ("k", "v"):               # (B, S, kv, hd)
             sx = _maybe(shp[1], mesh, seq_axes)
             return P(None, baxes, sx, None, None)
-        if name == "pos":                    # (S,)
-            return P(None, _maybe(shp[0], mesh, seq_axes))
+        if name == "pos":                    # (B, S)
+            return P(None, baxes, _maybe(shp[1], mesh, seq_axes))
         if name == "h":                      # mamba2 (B, nh, hp, N)
             return P(None, baxes, _maybe(shp[1], mesh, "model"), None, None)
         if name == "conv":                   # (B, 3, conv_dim)

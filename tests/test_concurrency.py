@@ -11,8 +11,34 @@ def test_fairness_bounds():
     assert cc.fairness([1.0, 1.0, 1.0]) == 1.0
     assert cc.fairness([1.0, 2.0]) == pytest.approx(1 - 1 / 1.5)
     assert cc.fairness([]) == 1.0
-    # severe imbalance can go negative (paper reports 0.016 at 8 streams)
-    assert cc.fairness([0.1, 10.0]) < 0.1
+    # paper convention: fairness is reported in [0, 1] — severe imbalance
+    # clamps to 0.0 (full collapse); the unbounded diagnostic is
+    # fairness_raw (paper reports 0.016 at 8 streams, still in range)
+    assert cc.fairness([0.1, 10.0]) == 0.0
+    assert cc.fairness_raw([0.1, 10.0]) < 0.0
+    assert 0.0 <= cc.fairness([0.1, 10.0, 0.5]) <= 1.0
+
+
+def test_latency_percentiles():
+    p = cc.latency_percentiles([1.0, 2.0, 3.0, 4.0])
+    assert p["p50"] == pytest.approx(2.5)
+    assert p["p99"] <= 4.0
+    assert cc.latency_percentiles([]) == {"p50": 0.0, "p99": 0.0}
+
+
+def test_characterize_streams_warms_every_thunk():
+    calls = []
+
+    def mk(i):
+        def thunk():
+            calls.append(i)
+            return jnp.zeros(())
+        return thunk
+
+    cc.characterize_streams(mk, 3, warmup=1, mode="async")
+    # warmup (one pass over ALL streams) + serial pass + async pass
+    assert calls[:3] == [0, 1, 2]
+    assert len(calls) == 9
 
 
 def test_fairness_min_max():
