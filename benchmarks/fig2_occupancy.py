@@ -4,9 +4,32 @@ Paper claim validated: throughput scales sublinearly and every precision
 needs a minimum parallelism to approach steady state; the lowest-precision
 format needs the MOST parallelism to saturate (FP8 ≥ 256 wavefronts on
 MI300A; here, FP8's normalized curve lags bf16's at small tile counts
-because the MXU drains fp8 tiles faster than HBM refills them)."""
+because the MXU drains fp8 tiles faster than HBM refills them).
+
+Side effect: the per-(precision, tiles) throughput samples are persisted
+through the autotune store and the FP8-demotion occupancy threshold is
+re-calibrated from them — the Fig-2 measurement *is* the evidence the
+online policy loop runs on.
+"""
+from repro.core import autotune
 from repro.core.characterization import occupancy_sweep, occupancy_threshold
 from repro.core.characterization import Record
+
+
+def persist(records):
+    """Record samples + recalibrate thresholds in the persistent artifact
+    (best-effort: a read-only dir or corrupt artifact must not fail the
+    benchmark)."""
+    try:
+        store = autotune.AutotuneStore()
+        store.load()
+        n = store.add_records(records)
+        store.calibrate()
+        store.save()
+        return n
+    except Exception as e:  # noqa: BLE001 — persistence is advisory
+        print(f"# fig2: autotune persist skipped ({type(e).__name__}: {e})")
+        return 0
 
 
 def run():
@@ -14,6 +37,7 @@ def run():
                            tile_m=128, k=256, n=256,
                            precisions=("fp32", "bf16", "fp8"), iters=3)
     th = occupancy_threshold(recs, frac=0.9)
+    persist(recs)
     recs.append(Record(
         name="fig2/threshold_tiles_to_90pct",
         us_per_call=0.0,

@@ -1,5 +1,8 @@
 """Run every benchmark (one per paper table/figure) and print
-``name,us_per_call,derived`` CSV. ``--only fig2`` filters.
+``name,us_per_call,derived`` CSV. ``--only fig2`` filters. ``--out DIR``
+additionally writes each figure's records as JSON (via the autotune
+store's serializer) so bench trajectories stay machine-readable across
+PRs.
 
 ``--backend ref,jnp,pallas`` re-runs the selected figures once per named
 matmul backend (kernels/registry.py); record names are prefixed with the
@@ -36,7 +39,7 @@ MODULES = [
 ]
 
 
-def _run_modules(only, tag: str) -> int:
+def _run_modules(only, tag: str, out_dir=None) -> int:
     failures = 0
     prefix = f"{tag}/" if tag else ""
     for name in MODULES:
@@ -45,8 +48,18 @@ def _run_modules(only, tag: str) -> int:
         t0 = time.time()
         try:
             mod = importlib.import_module(f"benchmarks.{name}")
-            for rec in mod.run():
+            records = list(mod.run())
+            for rec in records:
                 print(f"{prefix}{rec.csv()}" if prefix else rec.csv())
+            if out_dir:
+                from repro.core import autotune
+                import os
+                stem = f"{tag.replace(':', '_').replace('/', '_')}__{name}" \
+                    if tag else name
+                path = autotune.dump_records(
+                    records, os.path.join(out_dir, f"{stem}.json"))
+                print(f"# {prefix}{name}: records -> {path}",
+                      file=sys.stderr)
             print(f"# {prefix}{name}: ok in {time.time() - t0:.1f}s",
                   file=sys.stderr)
         except Exception as e:  # noqa: BLE001 — report and continue
@@ -70,6 +83,10 @@ def main() -> None:
                     help="execution-policy spec pinned for the whole run, "
                          "e.g. 'fp8:sparse24:pallas' (exclusive with "
                          "--backend sweeps)")
+    ap.add_argument("--out", default=None, metavar="DIR",
+                    help="also write each figure's records as JSON under "
+                         "DIR (one file per figure, per backend/policy "
+                         "tag)")
     args = ap.parse_args()
     if args.policy and args.backend:
         ap.error("--policy and --backend are mutually exclusive: a policy "
@@ -80,14 +97,14 @@ def main() -> None:
     failures = 0
     if args.policy:
         ex.set_default_policy(ex.parse_policy(args.policy))
-        failures += _run_modules(args.only, args.policy)
+        failures += _run_modules(args.only, args.policy, args.out)
     elif args.backend:
         backends = [b.strip() for b in args.backend.split(",") if b.strip()]
         for b in backends:
             ex.set_default_backend(b)
-            failures += _run_modules(args.only, b)
+            failures += _run_modules(args.only, b, args.out)
     else:
-        failures += _run_modules(args.only, "")
+        failures += _run_modules(args.only, "", args.out)
     if failures:
         sys.exit(1)
 

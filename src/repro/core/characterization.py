@@ -102,7 +102,11 @@ def occupancy_sweep(tile_counts: Sequence[int] = (1, 2, 4, 8, 16, 32),
                 us_per_call=2.0 * t * tile_m * k * n / gf * 1e6,
                 derived={"gflops": round(gf / 1e9, 2),
                          "norm_to_best": round(gf / best, 4),
-                         "tiles": t, "precision": prec}))
+                         "tiles": t, "precision": prec,
+                         # full GEMM shape: lets consumers (the autotune
+                         # store) convert M-tile counts into the M×N grid
+                         # tiles the OccupancyAdvisor's fill is measured in
+                         "m": t * tile_m, "k": k, "n": n}))
     return out
 
 

@@ -21,11 +21,50 @@ policy (used by the serving layer and the examples).
 from __future__ import annotations
 
 import dataclasses
+import os
 import time
 from typing import Any, Callable, Dict, List, Optional, Sequence
 
 import jax
 import numpy as np
+
+# TPU-class table value (paper Table 1 adaptation): used whenever the
+# runtime can't report a real accelerator core count (CPU containers).
+DEFAULT_N_CORES = 256
+
+
+def detect_core_count(default: int = DEFAULT_N_CORES) -> int:
+    """Grid-parallelism capacity of the attached accelerator(s).
+
+    Precedence: ``REPRO_N_CORES`` env override > summed per-device core
+    count from ``jax.devices()`` (accelerators only) > ``default``. CPU
+    devices report no meaningful MXU-slot count, so a CPU-only container
+    keeps the TPU-class table value — test and CI behavior is stable.
+    """
+    env = os.environ.get("REPRO_N_CORES")
+    if env:
+        try:
+            return max(1, int(env))
+        except ValueError:
+            pass
+    try:
+        devices = jax.devices()
+    except Exception:  # noqa: BLE001 — no backend at all
+        return default
+    total = 0
+    reported = False
+    for d in devices:
+        if getattr(d, "platform", "cpu") == "cpu":
+            return default
+        per = getattr(d, "num_cores", None) or getattr(d, "core_count", None)
+        if per:
+            reported = True
+            total += int(per)
+    # Accelerators that expose no core-count attribute (TPU devices often
+    # don't) keep the table default: a device *count* of 1-8 is not a
+    # grid-parallelism capacity, and fill-denominated thresholds scaled
+    # by it would be meaningless.
+    return total if reported else default
 
 
 # ---------------------------------------------------------------------------
@@ -156,8 +195,13 @@ def run_spatial(fns_and_args: Sequence[tuple], devices: Sequence) -> List[float]
 
 def characterize_streams(make_thunk: Callable[[int], Callable[[], Any]],
                          n_streams: int, *, warmup: int = 1,
-                         mode: str = "async") -> StreamReport:
-    """Run the paper's Fig-4/5 experiment for one stream count."""
+                         mode: str = "async", tracer=None) -> StreamReport:
+    """Run the paper's Fig-4/5 experiment for one stream count.
+
+    ``tracer`` (a :class:`repro.runtime.telemetry.Tracer`, duck-typed)
+    receives one ``stream`` event per stream with its measured completion
+    time plus a ``stream_report`` aggregate — the §6 observables feeding
+    the online calibration loop."""
     thunks = [make_thunk(i) for i in range(n_streams)]
     # warm EVERY thunk: each stream may be a distinct jitted computation
     # (or a distinct shape), and any compilation left for the timed region
@@ -176,7 +220,7 @@ def characterize_streams(make_thunk: Callable[[int], Callable[[], Any]],
         per_stream = run_serial(thunks)
     wall = time.perf_counter() - t0
 
-    return StreamReport(
+    report = StreamReport(
         n_streams=n_streams,
         mode=mode,
         per_stream_s=per_stream,
@@ -188,6 +232,14 @@ def characterize_streams(make_thunk: Callable[[int], Callable[[], Any]],
         fairness_min_max=fairness_min_max(per_stream),
         cv=cv(per_stream),
     )
+    if tracer is not None:
+        for i, s in enumerate(per_stream):
+            tracer.record_stream(i, s, mode=mode, n_streams=n_streams)
+        tracer.record("stream_report", wall_s=wall, meta={
+            "mode": mode, "n_streams": n_streams,
+            "fairness": report.fairness, "cv": report.cv,
+            "overlap_efficiency": report.overlap_efficiency})
+    return report
 
 
 # ---------------------------------------------------------------------------
@@ -223,30 +275,43 @@ class OccupancyAdvisor:
       (TPU: decode, small batch); disable for isolated compute-bound work.
     """
 
-    # TPU v5e-class threshold: ~1 MXU tile per core with double-buffering
+    # TPU v5e-class threshold: ~1 MXU tile per core with double-buffering.
+    # These class constants are the *priors* (Table-3/§9.2 values); an
+    # instance built by core/autotune carries measured ones instead.
     FP8_TILE_THRESHOLD = 2.0        # ×cores
     BF16_TILE_THRESHOLD = 1.0
 
-    def __init__(self, n_cores: int = 256):
-        self.n_cores = n_cores
+    def __init__(self, n_cores: Optional[int] = None, *,
+                 fp8_fill_target: Optional[float] = None,
+                 demote_below_fill: Optional[float] = None,
+                 calibrated: bool = False):
+        self.n_cores = n_cores if n_cores is not None else detect_core_count()
+        self.fp8_fill_target = self.FP8_TILE_THRESHOLD \
+            if fp8_fill_target is None else float(fp8_fill_target)
+        self.demote_below_fill = self.BF16_TILE_THRESHOLD \
+            if demote_below_fill is None else float(demote_below_fill)
+        self.calibrated = calibrated
 
     def advise(self, w: WorkloadProfile) -> Advice:
         rationale = []
         precision = w.precision
         batch_mult = 1
+        src = "measured" if self.calibrated else "paper §9.2"
         fill = w.grid_tiles / self.n_cores
-        if w.precision in ("fp8",) and fill < self.FP8_TILE_THRESHOLD:
-            if fill < self.BF16_TILE_THRESHOLD:
+        if w.precision in ("fp8",) and fill < self.fp8_fill_target:
+            if fill < self.demote_below_fill:
                 precision = "bf16"
                 rationale.append(
-                    f"grid fill {fill:.2f}× cores < {self.FP8_TILE_THRESHOLD}"
-                    "× needed for FP8 to hide HBM latency; bf16 is faster "
-                    "at this occupancy (paper §9.2: 'FP16 at 128 wavefronts "
+                    f"grid fill {fill:.2f}× cores < "
+                    f"{self.demote_below_fill:g}"
+                    f"× ({src}) needed for FP8 to hide HBM latency; bf16 "
+                    "is faster at this occupancy ('FP16 at 128 wavefronts "
                     "outperforms underutilized FP8')")
             else:
-                batch_mult = int(np.ceil(self.FP8_TILE_THRESHOLD / fill))
+                batch_mult = int(np.ceil(self.fp8_fill_target / fill))
                 rationale.append(
-                    f"batch ×{batch_mult} to reach FP8 occupancy threshold")
+                    f"batch ×{batch_mult} to reach FP8 occupancy threshold "
+                    f"({src})")
         max_streams = 4 if w.latency_sensitive else 8
         if w.latency_sensitive and w.concurrent_tenants > 4:
             rationale.append(

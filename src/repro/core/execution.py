@@ -235,6 +235,8 @@ def apply_policy(cfg, rt, policy: ExecutionPolicy):
 # ---------------------------------------------------------------------------
 
 def _dtype_key(dtype) -> str:
+    if isinstance(dtype, str):      # already a precision key ("fp8", ...)
+        return dtype
     name = jnp.dtype(dtype).name
     return {"float8_e4m3fn": "fp8", "float8_e5m2": "fp8",
             "bfloat16": "bf16", "float32": "fp32"}.get(name, name)
@@ -297,6 +299,12 @@ class BlockShapeCache:
         clamped = tuple(min(b, d) for b, d in zip(pref, (m, n, k)))
         return tuple((c if c >= 8 else None) for c in clamped)
 
+    def entries(self) -> Dict[Tuple[int, int, int, str],
+                              Tuple[Tuple[int, int, int], float]]:
+        """Snapshot of {(m, k, n, prec): (blocks, best seconds)} — the
+        serialization surface for :mod:`repro.core.autotune`."""
+        return dict(self._best)
+
     def __len__(self) -> int:
         return len(self._best)
 
@@ -343,6 +351,27 @@ def grid_tiles(m: int, n: int, tile: int = MXU_TILE) -> int:
     return max(1, -(-m // tile)) * max(1, -(-n // tile))
 
 
+# Calibrated advisor installed by core/autotune.install(): when set,
+# resolve_policy decides from *measured* thresholds instead of the
+# Table-3/§9.2 constants.
+_default_advisor: Optional[cc.OccupancyAdvisor] = None
+
+
+def set_default_advisor(advisor: Optional[cc.OccupancyAdvisor]) -> None:
+    global _default_advisor
+    _default_advisor = advisor
+
+
+def get_default_advisor() -> cc.OccupancyAdvisor:
+    return _default_advisor if _default_advisor is not None \
+        else cc.OccupancyAdvisor()
+
+
+def _ambient_tracer():
+    from repro.runtime import telemetry
+    return telemetry.get_tracer()
+
+
 def resolve_policy(m: int, k: int, n: int, *,
                    precision: str = "fp8",
                    backend: Optional[str] = None,
@@ -350,8 +379,8 @@ def resolve_policy(m: int, k: int, n: int, *,
                    tenants: int = 1,
                    streams: Optional[int] = None,
                    advisor: Optional[cc.OccupancyAdvisor] = None,
-                   cache: Optional[BlockShapeCache] = None
-                   ) -> ExecutionPolicy:
+                   cache: Optional[BlockShapeCache] = None,
+                   tracer=None) -> ExecutionPolicy:
     """Pick the execution policy the paper's §9.2 rules would pick.
 
     ``(m, k, n)`` is the dominant GEMM of the workload (tokens × d_model ×
@@ -360,8 +389,13 @@ def resolve_policy(m: int, k: int, n: int, *,
     the stream count. Explicit ``backend`` wins; otherwise Pallas is chosen
     whenever the resolved policy needs a technique only the kernels deliver
     (packed 2:4), else the module default.
+
+    With no explicit ``advisor``, the module default applies — a
+    *calibrated* advisor once :func:`repro.core.autotune.install` has
+    loaded a measured artifact, the Table-3-constant one otherwise. The
+    decision is recorded to ``tracer`` (or the ambient telemetry tracer).
     """
-    advisor = advisor or cc.OccupancyAdvisor()
+    advisor = advisor or get_default_advisor()
     profile = cc.WorkloadProfile(
         precision=precision,
         grid_tiles=grid_tiles(m, n),
@@ -381,13 +415,21 @@ def resolve_policy(m: int, k: int, n: int, *,
 
     n_streams = advice.max_streams if streams is None \
         else min(streams, advice.max_streams)
-    return ExecutionPolicy(
+    pol = ExecutionPolicy(
         precision=advice.suggested_precision,
         sparsity=sparsity,
         backend=chosen_backend,
         block_m=blocks[0], block_n=blocks[1], block_k=blocks[2],
         streams=max(1, n_streams),
         rationale=tuple(advice.rationale))
+    tr = tracer if tracer is not None else _ambient_tracer()
+    if tr is not None:
+        tr.record_resolve(m, k, n, policy=pol.spec(),
+                          precision=pol.precision, backend=pol.backend,
+                          fill=profile.grid_tiles / advisor.n_cores,
+                          calibrated=advisor.calibrated,
+                          streams=pol.streams)
+    return pol
 
 
 # ---------------------------------------------------------------------------
@@ -395,17 +437,36 @@ def resolve_policy(m: int, k: int, n: int, *,
 # ---------------------------------------------------------------------------
 
 def matmul(x: jax.Array, w, policy: Optional[ExecutionPolicy] = None, *,
-           out_dtype=jnp.bfloat16) -> jax.Array:
+           out_dtype=jnp.bfloat16, tracer=None) -> jax.Array:
     """``x @ w`` through the policy's backend.
 
     ``w`` is a dense (K, N) array or a :class:`PackedWeight`; leading dims
     of ``x`` are preserved. FP8 applies only to 2-D dense weights (batched
     operands keep their native path, matching the per-call-site behavior
     this layer replaced).
+
+    When a ``tracer`` is given (or an ambient telemetry tracer is
+    installed), the dispatch is recorded as a trace-time event — op kind,
+    (M, K, N), policy, backend — feeding the observatory's occupancy
+    histogram and per-shape accounting. Events fire at trace time (once
+    per jit specialization), not per executed step.
     """
     pol = policy or get_default_policy()
     be = registry.get_backend(pol.backend)
-    if isinstance(w, PackedWeight):
+    packed = isinstance(w, PackedWeight)
+    tr = tracer if tracer is not None else _ambient_tracer()
+    if tr is not None:
+        kk, nn = (w.k, w.n) if packed else (w.shape[-2], w.shape[-1])
+        mm = 1
+        for d in x.shape[:-1]:
+            mm *= int(d)
+        tr.record_matmul(mm, int(kk), int(nn),
+                         precision=pol.precision, backend=pol.backend,
+                         policy=pol.spec(),
+                         op="sparse24" if packed else
+                         ("fp8" if pol.precision == "fp8"
+                          and w.ndim == 2 else "dense"))
+    if packed:
         return be.sparse24(x, w.values, w.meta, out_dtype=out_dtype,
                            **pol.blocks)
     if pol.precision == "fp8" and w.ndim == 2:
@@ -421,6 +482,14 @@ def raw_matmul(a: jax.Array, b: jax.Array, *,
     through ``dense`` — so one ``--backend`` flag re-targets every
     characterization sweep."""
     be = registry.get_backend(backend or get_default_policy().backend)
-    if a.dtype in (jnp.float8_e4m3fn, jnp.float8_e5m2):
+    is_fp8 = a.dtype in (jnp.float8_e4m3fn, jnp.float8_e5m2)
+    tr = _ambient_tracer()
+    if tr is not None:
+        tr.record_matmul(int(a.shape[0]), int(a.shape[-1]),
+                         int(b.shape[-1]),
+                         precision=_dtype_key(a.dtype),
+                         backend=backend or get_default_policy().backend,
+                         op="fp8_qdot" if is_fp8 else "dense")
+    if is_fp8:
         return be.fp8_qdot(a, b, 1.0, 1.0, out_dtype=out_dtype)
     return be.dense(a, b, out_dtype=out_dtype)

@@ -47,14 +47,30 @@ def main():
     ap.add_argument("--admission", default="fair_quantum",
                     choices=["fifo", "round_robin", "fair_quantum"],
                     help="multi-tenant admission policy (with --tenants)")
+    ap.add_argument("--telemetry", action="store_true",
+                    help="record per-op/per-tenant events to a Tracer and "
+                         "print the observatory summary at exit")
+    ap.add_argument("--autotune", action="store_true",
+                    help="load the persistent autotune artifact "
+                         "(launch/profile.py) and resolve policies from "
+                         "calibrated thresholds")
     args = ap.parse_args()
 
     from repro.configs import get_arch, get_reduced
-    from repro.core import execution as ex
+    from repro.core import autotune, execution as ex
     from repro.models import init_params
     from repro.models.layers import RuntimeCfg
+    from repro.runtime import telemetry
     from repro.runtime.serve_loop import Request, ServeSession
     from repro.runtime.scheduler import StreamScheduler
+
+    if args.autotune:
+        store = autotune.install()
+        print(f"[serve] autotune artifact "
+              f"{'loaded: ' + store.path if store else 'not found'}")
+    tracer = telemetry.Tracer() if args.telemetry else None
+    if tracer is not None:
+        telemetry.set_tracer(tracer)    # observe trace-time matmul events
 
     cfg = get_reduced(args.arch) if args.reduced else get_arch(args.arch)
     if args.precision:
@@ -77,7 +93,7 @@ def main():
                         max_len=args.max_len, rt=rt,
                         temperature=args.temperature, seed=args.seed,
                         policy=policy, auto_backend=args.backend,
-                        verbose_policy=True)
+                        verbose_policy=True, telemetry=tracer)
 
     rng = np.random.default_rng(args.seed)
     t0 = time.time()
@@ -95,7 +111,8 @@ def main():
         # or an explicit streams= token) — a policy built just to pick a
         # backend carries the default streams=1 and would silently cap
         # every tenant to one slot.
-        sched = StreamScheduler(sess, admission=args.admission)
+        sched = StreamScheduler(sess, admission=args.admission,
+                                tracer=tracer)
         tpol = None
         if isinstance(sess.policy, ex.ExecutionPolicy) and (
                 args.policy == "auto" or "streams=" in (args.policy or "")):
@@ -117,6 +134,8 @@ def main():
           f"({total_new / max(dt, 1e-9):.1f} tok/s aggregate)")
     for r in done[:4]:
         print(f"  req {r.uid}: {len(r.out)} new tokens, first 8: {r.out[:8]}")
+    if tracer is not None:
+        print(tracer.summary())
     return 0
 
 

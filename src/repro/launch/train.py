@@ -52,6 +52,13 @@ def build_argparser():
     ap.add_argument("--log-every", type=int, default=10)
     ap.add_argument("--fail-at-step", type=int, default=0,
                     help="(testing) crash at this step to exercise restart")
+    ap.add_argument("--telemetry", action="store_true",
+                    help="record per-step wall times + trace-time matmul "
+                         "events; print the observatory summary at exit")
+    ap.add_argument("--autotune", action="store_true",
+                    help="load the persistent autotune artifact "
+                         "(launch/profile.py) so policy resolution uses "
+                         "calibrated thresholds")
     return ap
 
 
@@ -65,7 +72,14 @@ def run_once(args) -> int:
     from repro.runtime import train_loop as tl
     from repro.runtime.fault_tolerance import Heartbeat, StepMonitor
 
-    from repro.core import execution as ex
+    from repro.core import autotune, execution as ex
+    from repro.runtime import telemetry
+
+    if args.autotune:
+        store = autotune.install()
+        print(f"[train] autotune artifact "
+              f"{'loaded: ' + store.path if store else 'not found'}")
+    tracer = telemetry.Tracer() if args.telemetry else None
 
     cfg = get_reduced(args.arch) if args.reduced else get_arch(args.arch)
     if args.precision:
@@ -108,7 +122,7 @@ def run_once(args) -> int:
 
     train_step = jax.jit(tl.make_train_step(
         cfg, opt_cfg, rt, grad_compress=args.grad_compress,
-        microbatch=args.microbatch, policy=policy))
+        microbatch=args.microbatch, policy=policy, telemetry=tracer))
 
     monitor = StepMonitor()
     hb = None
@@ -130,6 +144,10 @@ def run_once(args) -> int:
             state, metrics = train_step(state, batch)
             loss = float(metrics["loss"])
             st = monitor.record(step, time.time() - t0)
+            if tracer is not None:
+                tracer.record("train_step", step=step,
+                              wall_s=st.duration_s,
+                              meta={"loss": loss})
             losses.append(loss)
             if hb:
                 hb.beat(step)
@@ -155,6 +173,8 @@ def run_once(args) -> int:
     dt = time.time() - t_start
     print(f"[train] done: {args.steps - step0} steps in {dt:.1f}s; "
           f"loss {losses[0]:.4f} -> {losses[-1]:.4f}")
+    if tracer is not None:
+        print(tracer.summary())
     return 0
 
 

@@ -139,13 +139,27 @@ class StreamScheduler:
 
     def __init__(self, session: ServeSession, *,
                  admission: str = "fair_quantum",
-                 advisor: Optional[cc.OccupancyAdvisor] = None):
+                 advisor: Optional[cc.OccupancyAdvisor] = None,
+                 tracer=None):
         if admission not in ADMISSION_POLICIES:
             raise ValueError(f"admission {admission!r} not in "
                              f"{ADMISSION_POLICIES}")
         self.session = session
         self.admission = admission
-        self.advisor = advisor or cc.OccupancyAdvisor()
+        # Default quota advisor: the calibrated one when autotune.install()
+        # has loaded a measured artifact, else the §9.2-constant advisor.
+        self.advisor = advisor or ex.get_default_advisor()
+        # tracer (repro.runtime.telemetry.Tracer, duck-typed): receives
+        # one "admit" event per slot grant and one "request" event per
+        # completion, keyed by tenant — the observed per-tenant p99 that
+        # fair_quantum quotas can consume instead of static budgets.
+        # The session's serving-op events (prefill/decode) follow the
+        # scheduler driving it: a scheduler with a tracer takes them over
+        # (so a reused session's events don't keep flowing to a previous
+        # run's tracer).
+        self.tracer = tracer
+        if tracer is not None:
+            session.tracer = tracer
         self.tenants: Dict[str, Tenant] = {}
         self._order: List[str] = []      # registration order (rr pointer)
         self._rr_next = 0
@@ -230,6 +244,11 @@ class StreamScheduler:
             self.session.admit(req)
             req.admit_step = self.step_count
             self.admitted_order.append(t.tenant_id)
+            if self.tracer is not None:
+                self.tracer.record("admit", tenant=t.tenant_id,
+                                   step=self.step_count,
+                                   meta={"uid": req.uid,
+                                         "cost": request_cost(req)})
             if self.admission == "fair_quantum":
                 t.vtime += request_cost(req) / t.weight
             if req.done:                 # completed at admission (max_new=1)
@@ -241,6 +260,11 @@ class StreamScheduler:
         req.finish_step = self.step_count
         t.completed.append(req)
         t.tokens_out += len(req.out)
+        if self.tracer is not None:
+            self.tracer.record_request(
+                t.tenant_id, wall_s=req.latency_s, tokens=len(req.out),
+                turnaround_steps=req.finish_step - req.submit_step,
+                step=self.step_count, uid=req.uid)
 
     # -- driving ------------------------------------------------------------
     def step(self) -> List[Request]:
@@ -308,10 +332,10 @@ def run_tenants(session: ServeSession, workloads: Dict[str, Sequence[Request]],
                 *, admission: str = "fair_quantum",
                 weights: Optional[Dict[str, float]] = None,
                 policies: Optional[Dict[str, ex.ExecutionPolicy]] = None,
-                max_steps: int = 100_000) -> SchedulerReport:
+                max_steps: int = 100_000, tracer=None) -> SchedulerReport:
     """One-shot helper: register tenants, submit their workloads up front,
     run to completion, return the report (benchmarks and the launcher)."""
-    sched = StreamScheduler(session, admission=admission)
+    sched = StreamScheduler(session, admission=admission, tracer=tracer)
     for tid in workloads:
         sched.add_tenant(tid, weight=(weights or {}).get(tid, 1.0),
                          policy=(policies or {}).get(tid))

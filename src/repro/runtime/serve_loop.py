@@ -16,6 +16,7 @@ from __future__ import annotations
 import dataclasses
 import functools
 import time
+from collections import OrderedDict
 from typing import Any, Callable, Dict, List, Optional, Tuple
 
 import jax
@@ -90,7 +91,15 @@ class Request:
 # Jitted step cache: sessions sharing (cfg, rt, temperature) share the
 # compiled serve/prefill functions instead of re-tracing per session (the
 # scheduler tests spin up many short-lived sessions over one tiny model).
-_JIT_CACHE: Dict[Any, Any] = {}
+# LRU-capped: a sweep over configs/policies/backends would otherwise pin
+# every compiled step it ever built for the life of the process.
+_JIT_CACHE: "OrderedDict[Any, Any]" = OrderedDict()
+JIT_CACHE_MAX = 16
+
+
+def clear_jit_cache() -> None:
+    """Drop every cached jitted serve/prefill step (tests, sweeps)."""
+    _JIT_CACHE.clear()
 
 
 def _cached_jit(kind: str, maker: Callable[[], Callable], *key_parts):
@@ -102,6 +111,9 @@ def _cached_jit(kind: str, maker: Callable[[], Callable], *key_parts):
     fn = _JIT_CACHE.get(key)
     if fn is None:
         fn = _JIT_CACHE[key] = jax.jit(maker())
+    _JIT_CACHE.move_to_end(key)
+    while len(_JIT_CACHE) > JIT_CACHE_MAX:
+        _JIT_CACHE.popitem(last=False)
     return fn
 
 
@@ -166,7 +178,7 @@ class ServeSession:
                  max_len: int, rt: RuntimeCfg = DEFAULT_RT,
                  temperature: float = 0.0, eos_id: int = -1, seed: int = 0,
                  policy=None, auto_backend: Optional[str] = None,
-                 verbose_policy: bool = False):
+                 verbose_policy: bool = False, telemetry=None):
         if policy == "auto":
             # paper-§9.2 resolution at session construction: the dominant
             # decode GEMM is (slots, d_model, d_ff); decode is
@@ -185,6 +197,9 @@ class ServeSession:
             if verbose_policy:
                 print(f"[serve] policy: {policy.describe()}")
         self.policy = policy
+        # telemetry: a repro.runtime.telemetry.Tracer (duck-typed) that
+        # receives per-op serving events (prefill/decode wall times).
+        self.tracer = telemetry
         self.params = params
         self.cfg = cfg
         self.rt = rt
@@ -231,7 +246,15 @@ class ServeSession:
         if not 0 < lp < self.max_len:
             raise ValueError(f"prompt length {lp} not in [1, {self.max_len})")
         prompt = jnp.asarray(np.asarray(req.prompt, np.int32))[None, :]
+        t0 = time.perf_counter()
         logits, pcaches = self.prefill_fn(self.params, prompt)
+        if self.tracer is not None:
+            jax.block_until_ready(logits)
+            self.tracer.record(
+                "prefill", m=lp, k=self.cfg.d_model, n=self.cfg.d_ff,
+                precision=self.cfg.precision,
+                wall_s=time.perf_counter() - t0,
+                tenant=req.tenant or "", meta={"uid": req.uid, "slot": slot})
         self.caches = _write_slot_cache(self.caches, pcaches, slot)
         if self.temperature > 0:
             self.rng, sub = jax.random.split(self.rng)
@@ -259,10 +282,17 @@ class ServeSession:
         if self.n_active == 0:
             return []
         self.rng, sub = jax.random.split(self.rng)
+        t0 = time.perf_counter()
         nxt, _, self.caches = self.step_fn(
             self.params, self.tokens, self.caches,
             jnp.asarray(self.slot_pos), sub)
-        nxt_np = np.asarray(nxt[:, 0])
+        nxt_np = np.asarray(nxt[:, 0])       # forces the step to complete
+        if self.tracer is not None:
+            self.tracer.record(
+                "decode", m=self.batch_slots, k=self.cfg.d_model,
+                n=self.cfg.d_ff, precision=self.cfg.precision,
+                wall_s=time.perf_counter() - t0,
+                meta={"n_active": self.n_active})
         self.tokens = nxt
         done = []
         for i, req in enumerate(self.slots):

@@ -1,0 +1,270 @@
+"""Runtime telemetry: the "execution observatory" event layer.
+
+The paper's techniques pay off only *context-dependently* (FP8 above an
+occupancy threshold §5, concurrency below the fairness-collapse knee §6,
+2:4 under memory-bound/multi-tenant execution §7), so the policy layer
+needs to *see* execution, not just predict it. This module is the seeing
+half of the closed loop (the acting half is
+:mod:`repro.core.autotune`):
+
+* :class:`Event` — one observation: op kind, (M, K, N), policy/backend,
+  wall / estimated seconds, stream id, tenant id, scheduler step.
+* :class:`Tracer` — bounded ring buffer of events with monotonic per-kind
+  counters and aggregate views: occupancy histogram (grid-tile fill of
+  the observed GEMMs), per-shape latency EMAs, per-tenant request counts
+  and p50/p99, fairness/overlap over tenants.
+
+Producers: ``core/execution.matmul``/``resolve_policy`` (trace-time shape
+and policy events), ``core/concurrency.characterize_streams`` (per-stream
+wall times), ``runtime/scheduler.StreamScheduler`` (admission + request
+completion per tenant), ``ServeSession`` (prefill/decode wall times), and
+``runtime/train_loop``/``launch/train.py`` (per-step wall times).
+
+An *ambient* tracer can be installed with :func:`set_tracer` so deep call
+sites (every ``dense()`` in the model stack) need no plumbing; harness
+code that owns its tracer passes it explicitly instead.
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+import time
+from collections import deque
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core import concurrency as cc
+
+# One unit of grid parallelism (mirrors execution.MXU_TILE without the
+# import cycle: execution lazily consults this module's ambient tracer).
+MXU_TILE = 128
+
+
+def _grid_tiles(m: int, n: int, tile: int = MXU_TILE) -> int:
+    return max(1, -(-int(m) // tile)) * max(1, -(-int(n) // tile))
+
+
+@dataclasses.dataclass
+class Event:
+    """One observed execution event. ``wall_s`` is a measured duration
+    (0.0 for trace-time events, which observe shape/policy but run before
+    any computation); ``est_s`` carries model-derived estimates when a
+    producer has one (roofline terms)."""
+    kind: str                        # matmul|resolve|stream|admit|request|...
+    t: float = 0.0                   # perf_counter timestamp at record
+    m: int = 0
+    k: int = 0
+    n: int = 0
+    precision: str = ""
+    backend: str = ""
+    policy: str = ""
+    wall_s: float = 0.0
+    est_s: float = 0.0
+    stream: int = -1
+    tenant: str = ""
+    step: int = -1
+    meta: Dict[str, Any] = dataclasses.field(default_factory=dict)
+
+    @property
+    def grid_tiles(self) -> int:
+        return _grid_tiles(self.m, self.n) if self.m and self.n else 0
+
+    def to_dict(self) -> Dict[str, Any]:
+        return dataclasses.asdict(self)
+
+
+class Tracer:
+    """Bounded event recorder with aggregate views.
+
+    Events land in a ring buffer of ``capacity`` (old events evicted).
+    The counting views — :meth:`counts`, :meth:`tenant_counts` — and the
+    per-shape latency EMAs are maintained as monotonic counters that
+    survive eviction, so they stay exact on long runs; the sample views
+    (:meth:`events`, :meth:`tenant_latencies`/:meth:`tenant_percentiles`,
+    :meth:`occupancy_histogram`) cover the retained window only.
+    Thread-safe: the serving loop, stream runners, and host callbacks may
+    record concurrently.
+    """
+
+    def __init__(self, capacity: int = 4096, ema_alpha: float = 0.25):
+        if capacity <= 0:
+            raise ValueError("capacity must be positive")
+        self.capacity = capacity
+        self.ema_alpha = ema_alpha
+        self._ring: deque = deque(maxlen=capacity)
+        self._counts: Dict[str, int] = {}
+        self._tenant_counts: Dict[Tuple[str, str], int] = {}
+        self._ema: Dict[Tuple[int, int, int, str], float] = {}
+        self._lock = threading.Lock()
+
+    # -- recording ----------------------------------------------------------
+    def record(self, kind: str, **fields) -> Event:
+        ev = Event(kind=kind, t=time.perf_counter(), **fields)
+        with self._lock:
+            self._ring.append(ev)
+            self._counts[kind] = self._counts.get(kind, 0) + 1
+            if ev.tenant:
+                tkey = (kind, ev.tenant)
+                self._tenant_counts[tkey] = self._tenant_counts.get(
+                    tkey, 0) + 1
+            if ev.wall_s > 0 and ev.m and ev.k and ev.n:
+                key = (ev.m, ev.k, ev.n, ev.precision)
+                prev = self._ema.get(key)
+                self._ema[key] = ev.wall_s if prev is None else \
+                    (1 - self.ema_alpha) * prev + self.ema_alpha * ev.wall_s
+        return ev
+
+    def record_matmul(self, m: int, k: int, n: int, *, precision: str = "",
+                      backend: str = "", policy: str = "",
+                      wall_s: float = 0.0, **meta) -> Event:
+        return self.record("matmul", m=m, k=k, n=n, precision=precision,
+                           backend=backend, policy=policy, wall_s=wall_s,
+                           meta=meta)
+
+    def record_resolve(self, m: int, k: int, n: int, *, policy: str,
+                       precision: str = "", backend: str = "",
+                       **meta) -> Event:
+        return self.record("resolve", m=m, k=k, n=n, precision=precision,
+                           backend=backend, policy=policy, meta=meta)
+
+    def record_stream(self, stream: int, wall_s: float, *, mode: str = "",
+                      n_streams: int = 0, **meta) -> Event:
+        meta.update(mode=mode, n_streams=n_streams)
+        return self.record("stream", stream=stream, wall_s=wall_s, meta=meta)
+
+    def record_request(self, tenant: str, *, wall_s: float = 0.0,
+                       tokens: int = 0, turnaround_steps: int = -1,
+                       step: int = -1, **meta) -> Event:
+        meta.update(tokens=tokens, turnaround_steps=turnaround_steps)
+        return self.record("request", tenant=tenant, wall_s=wall_s,
+                           step=step, meta=meta)
+
+    # -- raw views ----------------------------------------------------------
+    def events(self, kind: Optional[str] = None) -> List[Event]:
+        with self._lock:
+            evs = list(self._ring)
+        return evs if kind is None else [e for e in evs if e.kind == kind]
+
+    def counts(self) -> Dict[str, int]:
+        """Monotonic per-kind totals (exact even after ring eviction)."""
+        with self._lock:
+            return dict(self._counts)
+
+    def __len__(self) -> int:
+        with self._lock:
+            return len(self._ring)
+
+    # -- aggregate views ----------------------------------------------------
+    def shape_latency_ema(self) -> Dict[Tuple[int, int, int, str], float]:
+        """(M, K, N, precision) → EMA of measured wall seconds."""
+        with self._lock:
+            return dict(self._ema)
+
+    def occupancy_histogram(self, n_cores: int = 256,
+                            bins: Sequence[float] = (0.25, 0.5, 1.0, 2.0,
+                                                     4.0, 8.0)
+                            ) -> Dict[str, int]:
+        """Histogram of grid-tile *fill* (tiles / cores) over the observed
+        matmul/resolve events — the §5 occupancy axis as seen at runtime."""
+        edges = list(bins)
+        labels = [f"<{edges[0]}"] + \
+            [f"{lo}-{hi}" for lo, hi in zip(edges, edges[1:])] + \
+            [f">={edges[-1]}"]
+        hist = {lab: 0 for lab in labels}
+        for ev in self.events():
+            if ev.kind not in ("matmul", "resolve") or not ev.grid_tiles:
+                continue
+            fill = ev.grid_tiles / max(1, n_cores)
+            idx = int(np.searchsorted(edges, fill, side="right"))
+            hist[labels[idx]] += 1
+        return hist
+
+    def tenant_counts(self, kind: str = "request") -> Dict[str, int]:
+        """Monotonic per-tenant event totals — exact on long runs (kept as
+        counters, not derived from the evicting ring)."""
+        with self._lock:
+            return {tenant: c for (k, tenant), c
+                    in self._tenant_counts.items() if k == kind}
+
+    def tenant_latencies(self) -> Dict[str, List[float]]:
+        """Per-tenant request-latency samples over the *retained window*
+        (the newest ``capacity`` events): a sliding view by design — the
+        quota loop wants recent behavior, not all-time history."""
+        out: Dict[str, List[float]] = {}
+        for ev in self.events("request"):
+            if ev.tenant:
+                out.setdefault(ev.tenant, []).append(ev.wall_s)
+        return out
+
+    def tenant_percentiles(self) -> Dict[str, Dict[str, float]]:
+        """Per-tenant p50/p99 of request latency over the retained window
+        — the signal the fair_quantum quota loop consumes instead of
+        static stream budgets."""
+        return {t: cc.latency_percentiles(ls)
+                for t, ls in self.tenant_latencies().items()}
+
+    def tenant_fairness(self) -> float:
+        """Paper fairness index over per-tenant mean request latency
+        (retained window)."""
+        means = [float(np.mean(ls)) for ls in self.tenant_latencies().values()
+                 if ls]
+        return cc.fairness(means)
+
+    def stream_overlap(self) -> float:
+        """Overlap efficiency implied by the recorded stream events (serial
+        estimate = sum of per-stream times; wall = max)."""
+        per_stream = [e.wall_s for e in self.events("stream")]
+        if len(per_stream) < 2:
+            return 0.0
+        return cc.overlap_efficiency(float(sum(per_stream)),
+                                     float(max(per_stream)),
+                                     len(per_stream))
+
+    # -- reporting / serialization -----------------------------------------
+    def to_dicts(self) -> List[Dict[str, Any]]:
+        return [e.to_dict() for e in self.events()]
+
+    def summary(self, n_cores: int = 256) -> str:
+        counts = self.counts()
+        lines = ["[telemetry] events: " + (", ".join(
+            f"{k}={v}" for k, v in sorted(counts.items())) or "none")]
+        hist = self.occupancy_histogram(n_cores=n_cores)
+        if any(hist.values()):
+            lines.append("  occupancy fill (×cores): " + " ".join(
+                f"{lab}:{c}" for lab, c in hist.items() if c))
+        ema = self.shape_latency_ema()
+        if ema:
+            worst = sorted(ema.items(), key=lambda kv: -kv[1])[:5]
+            lines.append("  slowest shapes (EMA): " + "; ".join(
+                f"{m}x{k}x{n}/{p or '?'}={s * 1e3:.2f}ms"
+                for (m, k, n, p), s in worst))
+        tcounts = self.tenant_counts()
+        if tcounts:
+            pcts = self.tenant_percentiles()
+            lines.append("  tenants: " + "; ".join(
+                f"{t}: {c} req p50={pcts[t]['p50'] * 1e3:.1f}ms "
+                f"p99={pcts[t]['p99'] * 1e3:.1f}ms"
+                for t, c in sorted(tcounts.items())))
+            lines.append(f"  tenant fairness={self.tenant_fairness():.3f}")
+        return "\n".join(lines)
+
+
+# ---------------------------------------------------------------------------
+# Ambient tracer (deep call sites observe without plumbing)
+# ---------------------------------------------------------------------------
+
+_GLOBAL: Optional[Tracer] = None
+
+
+def set_tracer(tracer: Optional[Tracer]) -> Optional[Tracer]:
+    """Install (or clear, with None) the ambient tracer consulted by
+    ``execution.matmul``/``resolve_policy``. Returns the previous one so
+    callers can restore it."""
+    global _GLOBAL
+    prev, _GLOBAL = _GLOBAL, tracer
+    return prev
+
+
+def get_tracer() -> Optional[Tracer]:
+    return _GLOBAL

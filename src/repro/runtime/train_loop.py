@@ -87,7 +87,8 @@ def make_train_step(cfg: ArchConfig, opt_cfg: adamw.AdamWConfig,
                     rt: RuntimeCfg = DEFAULT_RT,
                     grad_compress: str = "none",
                     microbatch: int = 0,
-                    policy: Optional[ex.ExecutionPolicy] = None):
+                    policy: Optional[ex.ExecutionPolicy] = None,
+                    telemetry=None):
     """Returns train_step(state, batch) -> (state, metrics).
 
     ``microbatch > 0`` enables gradient accumulation: the global batch is
@@ -97,9 +98,22 @@ def make_train_step(cfg: ArchConfig, opt_cfg: adamw.AdamWConfig,
     ``policy`` (when given) overrides cfg.precision / cfg.sparsity_24 /
     rt.use_pallas for every matmul in the step — the one seam for backend
     sweeps (see core/execution.apply_policy).
+
+    ``telemetry`` (a :class:`repro.runtime.telemetry.Tracer`, duck-typed)
+    records the build-time configuration and is installed as the ambient
+    tracer while the step traces, so every ``matmul`` the step dispatches
+    lands in the tracer's occupancy/shape accounting. The returned step is
+    jitted by the caller — per-step wall times are the launcher's to
+    record (it owns the host-side clock).
     """
     if policy is not None:
         cfg, rt = ex.apply_policy(cfg, rt, policy)
+    if telemetry is not None:
+        telemetry.record("train_build", precision=cfg.precision,
+                         policy=policy.spec() if policy else "",
+                         meta={"grad_compress": grad_compress,
+                               "microbatch": microbatch,
+                               "d_model": cfg.d_model, "d_ff": cfg.d_ff})
     loss_fn = make_loss_fn(cfg, rt)
     grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
 
@@ -136,7 +150,21 @@ def make_train_step(cfg: ArchConfig, opt_cfg: adamw.AdamWConfig,
         metrics = {**metrics, **opt_metrics}
         return TrainState(new_params, new_opt, new_err), metrics
 
-    return train_step
+    if telemetry is None:
+        return train_step
+
+    def traced_step(state: TrainState, batch):
+        # Ambient tracer installed for the duration of the body: under
+        # jit this is trace time, so every matmul the step dispatches is
+        # observed exactly once per specialization.
+        from repro.runtime import telemetry as tm
+        prev = tm.set_tracer(telemetry)
+        try:
+            return train_step(state, batch)
+        finally:
+            tm.set_tracer(prev)
+
+    return traced_step
 
 
 def state_shape(cfg: ArchConfig, opt_cfg: adamw.AdamWConfig,

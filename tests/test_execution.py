@@ -161,6 +161,32 @@ def test_resolve_respects_custom_advisor_threshold():
     assert pol.precision == "fp8"
 
 
+def test_advisor_derives_core_count(monkeypatch):
+    """n_cores is detected, not hard-coded: REPRO_N_CORES wins, and a
+    CPU-only container falls back to the TPU-class table value (256)."""
+    monkeypatch.delenv("REPRO_N_CORES", raising=False)
+    assert cc.OccupancyAdvisor().n_cores == cc.DEFAULT_N_CORES == 256
+    monkeypatch.setenv("REPRO_N_CORES", "32")
+    adv = cc.OccupancyAdvisor()
+    assert adv.n_cores == 32
+    # same GEMM, smaller machine: 64 tiles now saturate -> fp8 retained
+    # where the 256-core default advisor would demote it
+    pol = ex.resolve_policy(1024, 512, 1024, precision="fp8", advisor=adv)
+    assert pol.precision == "fp8"
+    monkeypatch.delenv("REPRO_N_CORES")
+    demoted = ex.resolve_policy(1024, 512, 1024, precision="fp8")
+    assert demoted.precision == "bf16"
+
+
+def test_advisor_calibrated_thresholds_override_constants():
+    adv = cc.OccupancyAdvisor(n_cores=256, fp8_fill_target=4.0,
+                              demote_below_fill=4.0, calibrated=True)
+    # fill 2.0: fine for the constant advisor, demoted by the measured one
+    pol = ex.resolve_policy(2048, 512, 4096, precision="fp8", advisor=adv)
+    assert pol.precision == "bf16"
+    assert any("measured" in r for r in pol.rationale)
+
+
 def test_resolve_picks_table3_seeded_blocks():
     pol = ex.resolve_policy(2048, 4096, 2048, precision="fp8")
     assert (pol.block_m, pol.block_n, pol.block_k) == \

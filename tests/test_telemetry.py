@@ -1,0 +1,380 @@
+"""Execution observatory: telemetry tracer + autotune store/calibration.
+
+Covers the closed loop the subsystem exists for: events are recorded
+under the real scheduler (per-tenant accounting is exact), measurements
+persist across "process" boundaries (fresh store + fresh cache reproduce
+identical lookups), and calibration *changes policy decisions* — the
+FP8 demotion flips at the measured knee, not the Table-3 constant.
+"""
+import sys
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import autotune, concurrency as cc, execution as ex
+from repro.runtime import serve_loop, telemetry
+from repro.runtime.scheduler import run_tenants
+from repro.runtime.serve_loop import Request, ServeSession
+
+REPO_ROOT = Path(__file__).resolve().parents[1]
+
+
+@pytest.fixture
+def tracer():
+    tr = telemetry.Tracer(capacity=512)
+    prev = telemetry.set_tracer(None)     # tests opt in explicitly
+    yield tr
+    telemetry.set_tracer(prev)
+
+
+@pytest.fixture(autouse=True)
+def _clean_default_advisor():
+    yield
+    ex.set_default_advisor(None)
+
+
+# ---------------------------------------------------------------------------
+# Tracer mechanics
+# ---------------------------------------------------------------------------
+
+def test_ring_eviction_keeps_counts_exact():
+    tr = telemetry.Tracer(capacity=4)
+    for i in range(10):
+        tr.record("matmul", m=128, k=128, n=128, wall_s=0.001 * (i + 1))
+    assert len(tr) == 4                    # ring holds only the newest
+    assert tr.counts()["matmul"] == 10     # counters survive eviction
+    assert len(tr.events("matmul")) == 4
+
+
+def test_tenant_counts_exact_after_ring_eviction():
+    """Per-tenant accounting is a monotonic counter, not a ring view: a
+    long serving run must report exact request totals even after the
+    evicting buffer has dropped the early events."""
+    tr = telemetry.Tracer(capacity=8)
+    for i in range(50):
+        tr.record_request("alpha" if i % 2 else "beta", wall_s=0.01,
+                          tokens=1)
+    assert tr.tenant_counts("request") == {"alpha": 25, "beta": 25}
+    # sample views cover only the retained window, by design
+    assert sum(len(v) for v in tr.tenant_latencies().values()) == 8
+
+
+def test_shape_latency_ema_converges():
+    tr = telemetry.Tracer(ema_alpha=0.5)
+    for w in (0.1, 0.2, 0.2, 0.2):
+        tr.record("decode", m=8, k=64, n=256, precision="bf16", wall_s=w)
+    ema = tr.shape_latency_ema()[(8, 64, 256, "bf16")]
+    assert 0.15 < ema < 0.2
+
+
+def test_ambient_tracer_observes_matmul_and_resolve(tracer):
+    telemetry.set_tracer(tracer)
+    x = jax.random.normal(jax.random.PRNGKey(0), (64, 128), jnp.bfloat16)
+    w = jax.random.normal(jax.random.PRNGKey(1), (128, 256), jnp.bfloat16)
+    ex.matmul(x, w)
+    ex.resolve_policy(2048, 4096, 2048, precision="fp8")
+    telemetry.set_tracer(None)
+    ex.matmul(x, w)                        # no tracer: not recorded
+    counts = tracer.counts()
+    assert counts == {"matmul": 1, "resolve": 1}
+    (mm,) = tracer.events("matmul")
+    assert (mm.m, mm.k, mm.n) == (64, 128, 256)
+    assert mm.policy == "bf16:dense:jnp"
+    (rs,) = tracer.events("resolve")
+    assert rs.meta["fill"] == pytest.approx(256 / 256)   # 16x16 tiles
+    hist = tracer.occupancy_histogram(n_cores=256)
+    assert sum(hist.values()) == 2
+
+
+def test_characterize_streams_emits_stream_events(tracer):
+    a = jnp.ones((64, 64), jnp.float32)
+    fn = jax.jit(lambda x: x @ x)
+
+    def mk(i):
+        return lambda: fn(a)
+
+    rep = cc.characterize_streams(mk, 3, mode="async", tracer=tracer)
+    assert tracer.counts()["stream"] == 3
+    assert tracer.counts()["stream_report"] == 1
+    evs = tracer.events("stream")
+    assert sorted(e.stream for e in evs) == [0, 1, 2]
+    assert all(e.wall_s > 0 for e in evs)
+    (agg,) = tracer.events("stream_report")
+    assert agg.meta["fairness"] == pytest.approx(rep.fairness)
+
+
+# ---------------------------------------------------------------------------
+# Tracer accounting under the scheduler (per-tenant counts are exact)
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def model():
+    from repro.configs import get_reduced
+    from repro.models import init_params
+    cfg = get_reduced("llama3-8b")
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    return cfg, params
+
+
+def test_scheduler_event_accounting(model, tracer):
+    from repro.models.layers import RuntimeCfg
+    cfg, params = model
+    sess = ServeSession(params, cfg, batch_slots=2, max_len=64,
+                        rt=RuntimeCfg(ssm_chunk=16))
+    rng = np.random.default_rng(0)
+    workloads = {
+        "alpha": [Request(uid=i, max_new=4, prompt=rng.integers(
+            0, cfg.vocab_size, 5).astype(np.int32)) for i in range(3)],
+        "beta": [Request(uid=10 + i, max_new=4, prompt=rng.integers(
+            0, cfg.vocab_size, 5).astype(np.int32)) for i in range(2)],
+    }
+    rep = run_tenants(sess, workloads, admission="fair_quantum",
+                      tracer=tracer)
+    # request events match requests served, per tenant, exactly
+    assert tracer.tenant_counts("request") == {"alpha": 3, "beta": 2}
+    assert tracer.tenant_counts("admit") == {"alpha": 3, "beta": 2}
+    assert rep.tokens_out == sum(e.meta["tokens"]
+                                 for e in tracer.events("request"))
+    pcts = tracer.tenant_percentiles()
+    for t in ("alpha", "beta"):
+        assert pcts[t]["p99"] >= pcts[t]["p50"] >= 0
+    assert 0.0 <= tracer.tenant_fairness() <= 1.0
+    # the session piggybacks on the scheduler's tracer: serving ops seen
+    assert tracer.counts()["prefill"] == 5
+    assert tracer.counts()["decode"] >= 1
+
+
+# ---------------------------------------------------------------------------
+# Autotune store: round-trip, calibration, the policy flip
+# ---------------------------------------------------------------------------
+
+def _knee_samples(store, knee_tiles=1024,
+                  tiles=(256, 512, 1024, 2048)):
+    """FP8 loses below ``knee_tiles``, wins at/above it."""
+    for t in tiles:
+        win = t >= knee_tiles
+        store.record_sample("fp8", t, 120.0 if win else 60.0)
+        store.record_sample("bf16", t, 100.0)
+
+
+def test_store_roundtrip_identical_block_lookups(tmp_path):
+    st = autotune.AutotuneStore(str(tmp_path))
+    src = ex.BlockShapeCache(seed=False)
+    src.record(512, 512, 512, jnp.bfloat16, (256, 256, 128), 1.5e-3)
+    src.record(256, 1024, 256, jnp.float8_e4m3fn, (128, 128, 512), 0.8e-3)
+    assert st.ingest_cache(src) == 2
+    st.save()
+
+    # "fresh process": new store, new cache, nothing shared but the file
+    st2 = autotune.AutotuneStore(str(tmp_path))
+    assert st2.load()
+    dst = ex.BlockShapeCache(seed=False)
+    assert st2.apply(dst) == 2
+    for (m, k, n, dt) in ((512, 512, 512, jnp.bfloat16),
+                          (256, 1024, 256, jnp.float8_e4m3fn)):
+        assert dst.lookup(m, k, n, dt) == src.lookup(m, k, n, dt)
+
+
+def test_seeded_inf_entries_stay_out_of_artifact(tmp_path):
+    st = autotune.AutotuneStore(str(tmp_path))
+    assert st.ingest_cache(ex.BlockShapeCache(seed=True)) == 0
+
+
+def test_calibration_monotone_under_more_large_samples(tmp_path):
+    st = autotune.AutotuneStore(str(tmp_path))
+    _knee_samples(st, knee_tiles=1024)
+    thr0 = dict(st.calibrate(n_cores=256))
+    assert thr0["knee_tiles"] == 1024
+    # more large-shape samples where fp8 wins: threshold must never RISE
+    prev = thr0["demote_below_fill"]
+    for extra in (4096, 8192, 1024, 2048):
+        st.record_sample("fp8", extra, 150.0)
+        st.record_sample("bf16", extra, 100.0)
+        cur = st.calibrate(n_cores=256)["demote_below_fill"]
+        assert cur <= prev, (extra, cur, prev)
+        prev = cur
+    # evidence of an even earlier knee can only LOWER it
+    st.record_sample("fp8", 512, 130.0)
+    st.record_sample("fp8", 512, 130.0)
+    st.record_sample("fp8", 512, 130.0)
+    assert st.calibrate(n_cores=256)["demote_below_fill"] <= prev
+
+
+def test_calibrated_threshold_flips_resolve_policy(tmp_path):
+    """Acceptance: synthetic samples put the measured knee at fill 4.0
+    (1024 tiles / 256 cores); after persist + fresh-load, the advisor
+    demotes FP8 at fill 2.0 — where the hard-coded thresholds keep it."""
+    st = autotune.AutotuneStore(str(tmp_path))
+    _knee_samples(st, knee_tiles=1024)
+    st.calibrate(n_cores=256)
+    st.save()
+
+    st2 = autotune.AutotuneStore(str(tmp_path))
+    assert st2.load()
+    cal = st2.make_advisor(n_cores=256)
+    assert cal.calibrated
+    assert cal.demote_below_fill == pytest.approx(4.0)   # measured knee
+
+    # dominant GEMM at fill 2.0: 16 x 32 = 512 tiles over 256 cores
+    m, k, n = 2048, 4096, 4096
+    prior = ex.resolve_policy(m, k, n, precision="fp8",
+                              advisor=cc.OccupancyAdvisor(n_cores=256))
+    calibrated = ex.resolve_policy(m, k, n, precision="fp8", advisor=cal)
+    assert prior.precision == "fp8"            # 2.0 >= hard-coded 2.0
+    assert calibrated.precision == "bf16"      # 2.0 < measured 4.0
+    assert any("measured" in r for r in calibrated.rationale)
+    # above the measured knee FP8 survives calibration
+    high = ex.resolve_policy(2048, 4096, 16384, precision="fp8",
+                             advisor=cal)     # 2048 tiles -> fill 8.0
+    assert high.precision == "fp8"
+
+
+def test_install_makes_calibration_the_default(tmp_path):
+    st = autotune.AutotuneStore(str(tmp_path))
+    _knee_samples(st, knee_tiles=1024)
+    st.calibrate(n_cores=256)
+    st.record_block(384, 768, 384, "fp8", (128, 128, 512), 1e-3)
+    st.save()
+
+    assert autotune.install(art_dir=str(tmp_path)) is not None
+    try:
+        assert ex.get_default_advisor().calibrated
+        # no explicit advisor: resolve_policy now runs on measured knees
+        pol = ex.resolve_policy(2048, 4096, 4096, precision="fp8")
+        assert pol.precision == "bf16"
+        # persisted block entry reached the global cache
+        assert ex.BLOCK_CACHE.lookup(384, 768, 384, jnp.float8_e4m3fn) \
+            == (128, 128, 512)
+    finally:
+        ex.set_default_advisor(None)
+    # default restored: the hard-coded threshold decides again
+    assert ex.resolve_policy(2048, 4096, 4096,
+                             precision="fp8").precision == "fp8"
+
+
+def test_install_without_artifact_is_noop(tmp_path):
+    assert autotune.install(art_dir=str(tmp_path / "missing")) is None
+    assert not ex.get_default_advisor().calibrated
+
+
+def test_no_knee_evidence_never_claims_calibrated(tmp_path):
+    """A store without comparable fp8/bf16 buckets keeps the priors and
+    must not brand its advisor 'measured'."""
+    st = autotune.AutotuneStore(str(tmp_path))
+    st.record_sample("fp8", 256, 80.0)       # no bf16 at the same tiles
+    thr = st.calibrate(n_cores=256)
+    assert "demote_below_fill" not in thr
+    adv = st.make_advisor(n_cores=256)
+    assert not adv.calibrated
+    assert adv.demote_below_fill == cc.OccupancyAdvisor.BF16_TILE_THRESHOLD
+    st.save()
+    assert autotune.install(art_dir=str(tmp_path)) is not None
+    assert not ex.get_default_advisor().calibrated   # default untouched
+
+
+def test_occupancy_records_convert_to_grid_tile_units(tmp_path):
+    """occupancy_sweep counts M tiles at a fixed N; the store must fold
+    the N-tile factor in so calibrated fills match the advisor's units."""
+    from repro.core.characterization import Record
+    st = autotune.AutotuneStore(str(tmp_path))
+    rec = Record("occupancy/fp8/tiles=4", 10.0,
+                 {"gflops": 50.0, "tiles": 4, "precision": "fp8",
+                  "m": 512, "k": 256, "n": 256})
+    assert st.add_records([rec]) == 1
+    (s,) = st.samples
+    assert s.tiles == ex.grid_tiles(512, 256) == 8    # 4 M-tiles x 2 N-tiles
+    # legacy records without the shape fall back to the raw tile count
+    st2 = autotune.AutotuneStore(str(tmp_path))
+    st2.add_records([Record("occupancy/fp8/tiles=4", 10.0,
+                            {"gflops": 50.0, "tiles": 4})])
+    assert st2.samples[0].tiles == 4
+
+
+# ---------------------------------------------------------------------------
+# Profile CLI + benchmark seeding (end-to-end on CPU)
+# ---------------------------------------------------------------------------
+
+def test_profile_quick_writes_reloadable_artifact(tmp_path, capsys):
+    from repro.launch import profile
+    rc = profile.main(["--quick", "--artifact-dir", str(tmp_path)])
+    assert rc == 0
+    st = autotune.AutotuneStore(str(tmp_path))
+    assert st.load(), "profile --quick must write a loadable artifact"
+    assert st.thresholds.get("samples", 0) > 0
+    assert st.blocks and st.samples
+    assert "artifact written" in capsys.readouterr().out
+    # ambient tracer must not leak out of the CLI
+    assert telemetry.get_tracer() is None
+
+
+def test_table3_benchmark_seeds_persistent_store(tmp_path, monkeypatch):
+    monkeypatch.setenv(autotune.ENV_DIR, str(tmp_path))
+    sys.path.insert(0, str(REPO_ROOT))
+    try:
+        from benchmarks import table3_tile_latency as t3
+        from repro.core.characterization import latency_probe
+        records = latency_probe(tile_shapes=((128, 128, 128),),
+                                precisions=("bf16", "fp8"),
+                                chain=2, iters=1)
+        assert t3.persist(records) == 2
+    finally:
+        sys.path.remove(str(REPO_ROOT))
+    st = autotune.AutotuneStore()            # env-resolved dir
+    assert st.load()
+    assert (128, 128, 128, "fp8") in st.blocks
+    fresh = ex.BlockShapeCache(seed=False)
+    st.apply(fresh)
+    assert fresh.lookup(128, 128, 128, jnp.float8_e4m3fn) is not None
+
+
+def test_record_serializer_roundtrip(tmp_path):
+    from repro.core.characterization import Record
+    recs = [Record("occupancy/fp8/tiles=4", 12.5,
+                   {"gflops": 99.0, "tiles": 4, "precision": "fp8"}),
+            Record("latency/bf16/128x128x128", 3.0, {"tile": "128x128x128"})]
+    path = autotune.dump_records(recs, str(tmp_path / "figs" / "out.json"))
+    loaded = autotune.load_records(path)
+    assert [r["name"] for r in loaded] == [r.name for r in recs]
+    assert loaded[0]["derived"]["gflops"] == 99.0
+    st = autotune.AutotuneStore(str(tmp_path))
+    assert st.add_records(recs) == 2         # same rows ingest as evidence
+
+
+# ---------------------------------------------------------------------------
+# Satellites: jit-cache LRU, advisor core-count detection
+# ---------------------------------------------------------------------------
+
+def test_jit_cache_lru_capped_and_clearable():
+    serve_loop.clear_jit_cache()
+    try:
+        for i in range(serve_loop.JIT_CACHE_MAX + 5):
+            serve_loop._cached_jit("t", lambda: (lambda x: x), i)
+        assert len(serve_loop._JIT_CACHE) == serve_loop.JIT_CACHE_MAX
+        # oldest entries evicted, newest kept
+        assert ("t", 0) not in serve_loop._JIT_CACHE
+        assert ("t", serve_loop.JIT_CACHE_MAX + 4) in serve_loop._JIT_CACHE
+        # a hit refreshes recency: key 5 survives the next insertion
+        serve_loop._cached_jit("t", lambda: (lambda x: x), 5)
+        serve_loop._cached_jit("t", lambda: (lambda x: x), 999)
+        assert ("t", 5) in serve_loop._JIT_CACHE
+    finally:
+        serve_loop.clear_jit_cache()
+    assert len(serve_loop._JIT_CACHE) == 0
+
+
+def test_advisor_core_count_env_override(monkeypatch):
+    monkeypatch.setenv("REPRO_N_CORES", "64")
+    adv = cc.OccupancyAdvisor()
+    assert adv.n_cores == 64
+    # fill doubles relative to the 256-core default: 128 tiles saturate
+    pol = ex.resolve_policy(2048, 512, 1024, precision="fp8", advisor=adv)
+    assert pol.precision == "fp8"
+
+
+def test_advisor_core_count_cpu_fallback(monkeypatch):
+    monkeypatch.delenv("REPRO_N_CORES", raising=False)
+    assert cc.detect_core_count() == cc.DEFAULT_N_CORES
+    assert cc.OccupancyAdvisor().n_cores == 256
