@@ -7,7 +7,7 @@ PRs.
 ``--backend ref,jnp,pallas`` re-runs the selected figures once per named
 matmul backend (kernels/registry.py); record names are prefixed with the
 backend. The GEMMs in the characterization sweeps (fig2-9, table3, fig16)
-and the model-level figures (fig14, fig15, fig17) route through the
+and the model-level figures (fig14, fig15, fig17, fig18) route through the
 execution-policy layer, so one flag sweeps them across substrates. The
 sparsity-primitive figures (fig10-13) measure pack/prune/ref kernels
 directly and do not vary by backend (see EXPERIMENTS.md). ``--policy``
@@ -35,6 +35,7 @@ MODULES = [
     "fig15_concurrent_fp8",
     "fig16_mixed_precision",
     "fig17_serving_fairness",
+    "fig18_partitioned_serving",
     "roofline_report",
 ]
 

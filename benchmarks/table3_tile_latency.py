@@ -12,9 +12,14 @@ block-shape autotune cache (core/execution.BLOCK_CACHE) for this process,
 AND persisted through the autotune store (core/autotune.AutotuneStore),
 so one benchmark run permanently improves every later policy lookup that
 loads the artifact.
+
+Beyond the per-shape probe, the run sweeps 2–3 *alternative block
+tilings* per (shape, precision) through the Pallas kernel path
+(``block_sweep_probe``): the winning tiling — not a clamped prior — is
+what the cache and artifact keep for those shapes.
 """
 from repro.core import autotune
-from repro.core.characterization import latency_probe
+from repro.core.characterization import block_sweep_probe, latency_probe
 from repro.core.execution import seed_cache_from_records
 
 
@@ -38,6 +43,9 @@ def run():
         tile_shapes=((128, 128, 128), (256, 256, 128), (128, 128, 256),
                      (256, 256, 256)),
         precisions=("fp32", "bf16", "fp8"), chain=8, iters=3)
+    records += block_sweep_probe(
+        shapes=((256, 256, 256), (128, 256, 512)),
+        precisions=("bf16", "fp8"), iters=2)
     seed_cache_from_records(records)
     persist(records)
     return records

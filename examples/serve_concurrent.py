@@ -2,7 +2,10 @@
 batching), comparing dense vs 2:4-sparse weights, then run the same
 workload as FOUR TENANTS through the fairness-aware StreamScheduler and
 compare admission policies — the paper's fairness-collapse result (Fig 5)
-reproduced at the serving layer, plus the §9.2 fix.
+reproduced at the serving layer, plus the §9.2 fix. Finally the same four
+tenants run through the PARTITIONED serving runtime (2 spatial
+partitions, load-aware placement, telemetry-driven adaptive quotas) — the
+§9.2 "prefer sub-mesh isolation" guidance as a working server.
 
   PYTHONPATH=src python examples/serve_concurrent.py
 """
@@ -16,6 +19,7 @@ from repro.configs import get_reduced
 from repro.core.concurrency import OccupancyAdvisor, WorkloadProfile
 from repro.models import init_params
 from repro.models.layers import RuntimeCfg
+from repro.runtime.partition import run_partitioned
 from repro.runtime.scheduler import run_tenants
 from repro.runtime.serve_loop import Request, ServeSession
 
@@ -58,6 +62,30 @@ def multi_tenant(cfg, params, n_tenants=4, reqs_per_tenant=2, slots=2):
         print(rep.summary())
 
 
+def partitioned(cfg, params, n_tenants=4, reqs_per_tenant=2, slots=2):
+    """The same four tenants on 1 shared-FIFO partition vs 2 partitions
+    with load-aware placement + adaptive quotas: single-queue fairness
+    collapse vs partition-local isolation, fused into one report."""
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(0, cfg.vocab_size, 4).astype(np.int32)
+               for _ in range(reqs_per_tenant)]
+
+    def workloads():
+        return {f"tenant{i}": [Request(uid=i * 100 + j, prompt=p.copy(),
+                                       max_new=8)
+                               for j, p in enumerate(prompts)]
+                for i in range(n_tenants)}
+
+    for n_parts, placement, admission, quota in (
+            (1, "packed", "fifo", "static"),
+            (2, "load_aware", "fair_quantum", "adaptive")):
+        rep = run_partitioned(params, cfg, workloads(),
+                              n_partitions=n_parts, placement=placement,
+                              admission=admission, quota=quota,
+                              batch_slots=slots, max_len=96, rt=RT)
+        print(rep.summary())
+
+
 def main():
     base = get_reduced("llama3-8b")
     params = init_params(jax.random.PRNGKey(0), base)
@@ -77,6 +105,9 @@ def main():
 
     print("\n-- multi-tenant admission policies (4 tenants, 2 slots) --")
     multi_tenant(base, params)
+
+    print("\n-- partitioned serving (1x fifo vs 2x load_aware+adaptive) --")
+    partitioned(base, params)
 
 
 if __name__ == "__main__":

@@ -163,12 +163,21 @@ class AutotuneStore:
         """Ingest benchmark Records: ``occupancy/{prec}/tiles={t}`` rows
         become samples, ``latency/{prec}/{m}x{n}x{k}`` rows become block
         entries (precision-preferred blocks clamped to the shape, matching
-        ``execution.seed_cache_from_records``). Returns rows ingested."""
+        ``execution.seed_cache_from_records``), and
+        ``blocksweep/{prec}/{m}x{n}x{k}/{bm}x{bn}x{bk}`` rows become block
+        entries carrying the tiling that was *actually measured* — the
+        per-key min keeps the sweep's winner. Returns rows ingested."""
         from repro.core import execution as ex
         n_in = 0
         for r in records:
             parts = r.name.split("/")
-            if len(parts) == 3 and parts[0] == "occupancy":
+            sweep = ex.parse_blocksweep_name(r.name)
+            if sweep is not None:
+                m, n, k, prec, blocks = sweep
+                self.record_block(m, k, n, prec, blocks,
+                                  r.us_per_call * 1e-6)
+                n_in += 1
+            elif len(parts) == 3 and parts[0] == "occupancy":
                 d = r.derived
                 if "tiles" in d and "gflops" in d:
                     # Store tiles in the advisor's unit — M×N grid tiles

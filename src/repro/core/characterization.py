@@ -191,6 +191,77 @@ def latency_probe(tile_shapes: Sequence[Tuple[int, int, int]] = (
 
 
 # ---------------------------------------------------------------------------
+# Table 3 extension — block-shape *sweep* (alternative tilings per shape)
+# ---------------------------------------------------------------------------
+
+def block_candidates(m: int, n: int, k: int, precision: str,
+                     max_candidates: int = 3
+                     ) -> List[Tuple[int, int, int]]:
+    """2–3 alternative (bm, bn, bk) tilings for one (m, n, k) GEMM:
+    the precision-preferred Table-3 blocks, the square MXU-native tile,
+    and the single-block (whole-problem) tiling — each clamped to the
+    problem, deduplicated, deterministic order."""
+    from repro.core import execution as ex
+    pref = ex.BlockShapeCache.TABLE3_PREFERRED.get(
+        precision, (128, 128, 128))
+    raw = [pref, (128, 128, 128), (m, n, k)]
+    out: List[Tuple[int, int, int]] = []
+    for bm, bn, bk in raw:
+        cand = (min(bm, m), min(bn, n), min(bk, k))
+        if cand not in out:
+            out.append(cand)
+    return out[:max_candidates]
+
+
+def block_sweep_probe(shapes: Sequence[Tuple[int, int, int]] = (
+        (256, 256, 256), (128, 256, 512)),
+        precisions: Sequence[str] = ("bf16", "fp8"),
+        backend: str = "pallas", iters: int = 3) -> List[Record]:
+    """Measure each shape under *alternative block tilings* (the ROADMAP
+    "calibrate block shapes from real block sweeps" item — the plain
+    :func:`latency_probe` measures shapes, never competing tilings).
+
+    Routes through the policy dispatcher with the blocks pinned on an
+    explicit :class:`~repro.core.execution.ExecutionPolicy`, so the sweep
+    exercises exactly the path ``resolve_policy`` will later stamp the
+    winning blocks onto. Record names are
+    ``blocksweep/{prec}/{m}x{n}x{k}/{bm}x{bn}x{bk}``, the format
+    :meth:`repro.core.autotune.AutotuneStore.add_records` ingests as block
+    evidence (its per-key min keeps the winner); the fastest tiling per
+    (shape, precision) is flagged ``winner=True``."""
+    from repro.core import execution as ex
+    bad = set(precisions) - set(ex.PRECISIONS)
+    if bad:
+        # a silent fallback would mislabel another precision's latency
+        # as block evidence for this one in the autotune artifact
+        raise ValueError(f"block_sweep_probe precisions {sorted(bad)} not "
+                         f"in policy precisions {ex.PRECISIONS}")
+    out: List[Record] = []
+    for prec in precisions:
+        for (m, n, k) in shapes:
+            x = _mk((m, k), jnp.bfloat16)
+            w = _mk((k, n), jnp.bfloat16, 1)
+            group: List[Record] = []
+            for (bm, bn, bk) in block_candidates(m, n, k, prec):
+                pol = ex.ExecutionPolicy(
+                    precision=prec, backend=backend,
+                    block_m=bm, block_n=bn, block_k=bk)
+                fn = jax.jit(lambda a, b, pol=pol: ex.matmul(
+                    a, b, pol, out_dtype=jnp.float32))
+                dt = _time_fn(fn, x, w, iters=iters)
+                group.append(Record(
+                    name=f"blocksweep/{prec}/{m}x{n}x{k}/{bm}x{bn}x{bk}",
+                    us_per_call=dt * 1e6,
+                    derived={"m": m, "n": n, "k": k, "precision": prec,
+                             "blocks": f"{bm}x{bn}x{bk}",
+                             "backend": backend, "winner": False}))
+            best = min(group, key=lambda r: r.us_per_call)
+            best.derived["winner"] = True
+            out.extend(group)
+    return out
+
+
+# ---------------------------------------------------------------------------
 # Fig 6–8 — contention sweep (stream count × working-set size)
 # ---------------------------------------------------------------------------
 

@@ -312,27 +312,65 @@ class BlockShapeCache:
 BLOCK_CACHE = BlockShapeCache()
 
 
+# Precisions the block-evidence ingestion paths understand (dtype-mapped).
+SWEEP_DTYPES = {"fp8": jnp.float8_e4m3fn, "bf16": jnp.bfloat16,
+                "fp16": jnp.float16, "fp32": jnp.float32}
+
+
+def parse_blocksweep_name(name: str
+                          ) -> Optional[Tuple[int, int, int, str,
+                                              Tuple[int, int, int]]]:
+    """Parse a ``blocksweep/{prec}/{m}x{n}x{k}/{bm}x{bn}x{bk}`` record
+    name into ``(m, n, k, prec, (bm, bn, bk))``; None if it isn't one or
+    names a precision outside :data:`SWEEP_DTYPES`. The single parser for
+    both ingestion paths (:func:`seed_cache_from_records` and
+    :meth:`repro.core.autotune.AutotuneStore.add_records`), so they can't
+    drift on format or accepted precisions."""
+    parts = name.split("/")
+    if len(parts) != 4 or parts[0] != "blocksweep" \
+            or parts[1] not in SWEEP_DTYPES:
+        return None
+    try:
+        m, n, k = (int(v) for v in parts[2].split("x"))
+        blocks = tuple(int(v) for v in parts[3].split("x"))
+    except ValueError:
+        return None
+    if len(blocks) != 3:
+        return None
+    return m, n, k, parts[1], blocks
+
+
 def seed_cache_from_records(records: Sequence[Any],
                             cache: Optional[BlockShapeCache] = None) -> int:
-    """Ingest ``latency_probe`` Records (name ``latency/{prec}/{m}x{n}x{k}``)
-    into the block cache; returns how many were folded in.
+    """Ingest probe Records into the block cache; returns how many were
+    folded in.
 
-    The probe measures per-shape latency, not a block sweep, so the entry
-    keeps the precision-preferred blocks (clamped to the shape) and the
-    record only refreshes the latency evidence for that shape — fabricating
-    a block choice a measurement never exercised would silently override
-    the Table-3 seeding.
+    ``latency/{prec}/{m}x{n}x{k}`` rows (the shape probe) keep the
+    precision-preferred blocks clamped to the shape — the probe measures
+    per-shape latency, not a block sweep, and fabricating a block choice a
+    measurement never exercised would silently override the Table-3
+    seeding. ``blocksweep/{prec}/{m}x{n}x{k}/{bm}x{bn}x{bk}`` rows (the
+    tiling sweep) carry the blocks that *were* measured, so the cache's
+    per-key best-latency rule promotes the sweep's winning tiling.
     """
-    cache = cache or BLOCK_CACHE
+    # NOT `cache or BLOCK_CACHE`: an empty cache is falsy (len 0) and
+    # would silently redirect the caller's entries to the global cache
+    cache = cache if cache is not None else BLOCK_CACHE
     n_in = 0
     for r in records:
+        sweep = parse_blocksweep_name(r.name)
+        if sweep is not None:
+            m, n, k, prec, blocks = sweep
+            cache.record(m, k, n, SWEEP_DTYPES[prec], blocks,
+                         r.us_per_call * 1e-6)
+            n_in += 1
+            continue
         parts = r.name.split("/")
         if len(parts) != 3 or parts[0] != "latency":
             continue
         prec = parts[1]
         m, n, k = (int(v) for v in parts[2].split("x"))
-        dtype = {"fp8": jnp.float8_e4m3fn, "bf16": jnp.bfloat16,
-                 "fp16": jnp.float16, "fp32": jnp.float32}.get(prec)
+        dtype = SWEEP_DTYPES.get(prec)
         pref = BlockShapeCache.TABLE3_PREFERRED.get(prec)
         if dtype is None or pref is None:
             continue
@@ -411,7 +449,8 @@ def resolve_policy(m: int, k: int, n: int, *,
 
     dtype = jnp.float8_e4m3fn if advice.suggested_precision == "fp8" \
         else jnp.bfloat16
-    blocks = (cache or BLOCK_CACHE).lookup(m, k, n, dtype) or (None,) * 3
+    blocks = (cache if cache is not None else BLOCK_CACHE).lookup(
+        m, k, n, dtype) or (None,) * 3
 
     n_streams = advice.max_streams if streams is None \
         else min(streams, advice.max_streams)

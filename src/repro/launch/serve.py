@@ -10,6 +10,9 @@ fairness/CV/p50/p99 report.
       --requests 8 --max-new 16 --precision fp8
   PYTHONPATH=src python -m repro.launch.serve --arch llama3-8b --reduced \
       --requests 8 --tenants 4 --admission fair_quantum
+  PYTHONPATH=src python -m repro.launch.serve --arch llama3-8b --reduced \
+      --requests 8 --tenants 4 --partitions 2 --placement load_aware \
+      --adaptive-quota
 """
 from __future__ import annotations
 
@@ -47,6 +50,19 @@ def main():
     ap.add_argument("--admission", default="fair_quantum",
                     choices=["fifo", "round_robin", "fair_quantum"],
                     help="multi-tenant admission policy (with --tenants)")
+    ap.add_argument("--partitions", type=int, default=1,
+                    help="spatial sub-mesh partitions; >1 serves tenants "
+                         "through the PartitionedServer "
+                         "(runtime/partition.py): one session+scheduler "
+                         "per partition, fused report")
+    ap.add_argument("--placement", default="spread",
+                    choices=["packed", "spread", "load_aware"],
+                    help="tenant->partition routing policy "
+                         "(with --partitions)")
+    ap.add_argument("--adaptive-quota", action="store_true",
+                    help="re-derive per-tenant fair_quantum slot caps "
+                         "online from Tracer.tenant_percentiles() instead "
+                         "of static stream budgets")
     ap.add_argument("--telemetry", action="store_true",
                     help="record per-op/per-tenant events to a Tracer and "
                          "print the observatory summary at exit")
@@ -89,20 +105,59 @@ def main():
 
     rt = RuntimeCfg(ssm_chunk=32)
     params = init_params(jax.random.PRNGKey(args.seed), cfg)
-    sess = ServeSession(params, cfg, batch_slots=args.slots,
-                        max_len=args.max_len, rt=rt,
-                        temperature=args.temperature, seed=args.seed,
-                        policy=policy, auto_backend=args.backend,
-                        verbose_policy=True, telemetry=tracer)
 
     rng = np.random.default_rng(args.seed)
-    t0 = time.time()
     requests = []
     for uid in range(args.requests):
         prompt = rng.integers(0, cfg.vocab_size,
                               size=(args.prompt_len,)).astype(np.int32)
         requests.append(Request(uid=uid, prompt=prompt,
                                 max_new=args.max_new))
+
+    quota = "adaptive" if args.adaptive_quota else None
+    if args.partitions > 1:
+        # partitioned serving runtime: one session+scheduler per spatial
+        # partition, tenants routed by --placement, fused report
+        from repro.runtime.partition import PartitionedServer
+        server = PartitionedServer(
+            params, cfg, n_partitions=args.partitions,
+            batch_slots=args.slots, max_len=args.max_len, rt=rt,
+            placement=args.placement, admission=args.admission,
+            quota=quota, temperature=args.temperature, seed=args.seed,
+            policy=policy,
+            session_kw={"auto_backend": args.backend,
+                        "verbose_policy": True})
+        # timed region starts AFTER construction: session setup (policy
+        # resolution, sparse24 pre-pack, cache alloc) must not pollute
+        # the reported serving tok/s
+        t0 = time.time()
+        n_tenants = max(args.tenants, 1)
+        for i in range(n_tenants):
+            part = server.add_tenant(f"tenant{i}")
+            print(f"[serve] tenant{i} -> partition {part} "
+                  f"({args.placement})")
+        for uid, req in enumerate(requests):
+            server.submit(f"tenant{uid % n_tenants}", req)
+        done = server.run()
+        print(server.report().summary())
+        if tracer is not None:
+            print(server.merged_tracer().summary())
+            # the ambient tracer holds the trace-time per-op events
+            # (matmul/resolve) the per-partition tracers don't see
+            print(tracer.summary())
+        dt = time.time() - t0
+        total_new = sum(len(r.out) for r in done)
+        print(f"[serve] {len(done)}/{args.requests} requests, "
+              f"{total_new} tokens in {dt:.1f}s "
+              f"({total_new / max(dt, 1e-9):.1f} tok/s aggregate)")
+        return 0
+
+    sess = ServeSession(params, cfg, batch_slots=args.slots,
+                        max_len=args.max_len, rt=rt,
+                        temperature=args.temperature, seed=args.seed,
+                        policy=policy, auto_backend=args.backend,
+                        verbose_policy=True, telemetry=tracer)
+    t0 = time.time()
 
     if args.tenants > 1:
         # multi-tenant: requests dealt round-robin over tenant queues. The
@@ -112,7 +167,7 @@ def main():
         # backend carries the default streams=1 and would silently cap
         # every tenant to one slot.
         sched = StreamScheduler(sess, admission=args.admission,
-                                tracer=tracer)
+                                tracer=tracer, quota=quota)
         tpol = None
         if isinstance(sess.policy, ex.ExecutionPolicy) and (
                 args.policy == "auto" or "streams=" in (args.policy or "")):

@@ -25,6 +25,16 @@ Admission policies
   cap as the default — the §9.2 "≤4 streams for latency-sensitive" rule
   as an admission constraint.
 
+Quota resolution is a pluggable :class:`QuotaPolicy`:
+
+* :class:`StaticQuota` — the stream-budget/advisor constants above.
+* :class:`AdaptiveQuota` — re-derives per-tenant slot caps online every N
+  steps from ``Tracer.tenant_percentiles()``: a tenant whose p99/p50
+  turnaround ratio is an outlier (deep backlog bursting through the
+  shared slots) gets its cap shrunk toward 1 and the freed share is
+  granted to the best-behaved backlogged tenants, with the aggregate
+  grant bounded by the partition's slot budget.
+
 Telemetry: per-tenant fairness / CV / overlap efficiency and p50/p99
 request latency, all through :mod:`repro.core.concurrency` so the serving
 report reads like the paper's stream characterization. Step-domain
@@ -35,7 +45,7 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Any, Dict, List, Optional, Sequence
+from typing import Any, Dict, List, Optional, Sequence, Union
 
 import numpy as np
 
@@ -44,6 +54,7 @@ from repro.core import execution as ex
 from repro.runtime.serve_loop import Request, ServeSession
 
 ADMISSION_POLICIES = ("fifo", "round_robin", "fair_quantum")
+QUOTA_POLICIES = ("static", "adaptive")
 
 
 def request_cost(req: Request) -> int:
@@ -99,6 +110,7 @@ class SchedulerReport:
     tenants fully share the decode batch, 0.0 when they serialize).
     """
     admission: str
+    quota: str
     n_tenants: int
     steps: int
     wall_s: float
@@ -114,7 +126,8 @@ class SchedulerReport:
 
     def summary(self) -> str:
         lines = [
-            f"[sched] {self.admission}: {self.n_tenants} tenants, "
+            f"[sched] {self.admission}/{self.quota}: {self.n_tenants} "
+            f"tenants, "
             f"{self.steps} steps, {self.tokens_out} tokens in "
             f"{self.wall_s:.2f}s | fairness={self.fairness:.3f} "
             f"cv={self.cv:.3f} overlap_eff={self.overlap_efficiency:.3f}"]
@@ -126,6 +139,163 @@ class SchedulerReport:
                 f"p50={t.p50_latency_s * 1e3:.1f}ms "
                 f"p99={t.p99_latency_s * 1e3:.1f}ms")
         return "\n".join(lines)
+
+
+# ---------------------------------------------------------------------------
+# Quota policies (pluggable per-tenant slot-cap resolution)
+# ---------------------------------------------------------------------------
+
+class QuotaPolicy:
+    """How many concurrent slots each tenant may hold.
+
+    ``slot_cap`` is consulted on every admission attempt; ``on_step`` runs
+    once per scheduler step *before* admission, which is where an online
+    policy re-derives its caps."""
+
+    name = "quota"
+
+    def slot_cap(self, sched: "StreamScheduler", tenant: Tenant) -> int:
+        raise NotImplementedError
+
+    def on_step(self, sched: "StreamScheduler") -> None:
+        pass
+
+
+class StaticQuota(QuotaPolicy):
+    """The original resolution: the tenant policy's stream budget if it
+    carries one, else the advisor's §9.2 cap for this tenancy level."""
+
+    name = "static"
+
+    def slot_cap(self, sched: "StreamScheduler", tenant: Tenant) -> int:
+        return tenant.slot_cap(sched._advisor_cap())
+
+
+class AdaptiveQuota(QuotaPolicy):
+    """Telemetry-driven slot caps (the ROADMAP "drive fair_quantum quotas
+    online from ``Tracer.tenant_percentiles()``" item).
+
+    Caps seed at each tenant's weighted share of the partition's slot
+    budget (every tenant keeps a floor of 1). Every ``interval`` steps the
+    scheduler's tracer is consulted: per tenant, the p99/p50 ratio of
+    request turnaround (deterministic step domain by default) is compared
+    against the tenant median — a ratio beyond ``outlier_factor`` × median
+    marks a *hogging* tenant (a deep backlog whose tail is bursting
+    through the shared slots), its cap shrinks by 1 (floor 1), and the
+    freed share is granted to the best-behaved backlogged tenant. The
+    aggregate grant never exceeds ``max(batch_slots, n_tenants)`` — the
+    partition's budget with the per-tenant floor — so online re-derivation
+    can redistribute but never oversubscribe."""
+
+    name = "adaptive"
+
+    def __init__(self, interval: int = 8, outlier_factor: float = 1.5,
+                 metric: str = "turnaround_steps", min_samples: int = 2):
+        if interval <= 0:
+            raise ValueError("interval must be positive")
+        self.interval = interval
+        self.outlier_factor = outlier_factor
+        self.metric = metric
+        self.min_samples = min_samples
+        self.caps: Dict[str, int] = {}
+        self.recalcs = 0
+        self.shrunk: Dict[str, int] = {}   # tenant -> total cap reductions
+        self._seeded_for: frozenset = frozenset()
+
+    # -- seeding ------------------------------------------------------------
+    def budget(self, sched: "StreamScheduler") -> int:
+        return max(sched.session.batch_slots, len(sched.tenants))
+
+    def _seed(self, sched: "StreamScheduler") -> None:
+        tenants = [sched.tenants[tid] for tid in sched._order]
+        total_w = sum(t.weight for t in tenants) or 1.0
+        budget = self.budget(sched)
+        caps = {t.tenant_id: max(1, int(budget * t.weight / total_w))
+                for t in tenants}
+        # distribute any remaining share deterministically: heaviest
+        # first, registration order breaking ties
+        remaining = budget - sum(caps.values())
+        for t in sorted(tenants, key=lambda t: (-t.weight,
+                                                sched._order.index(
+                                                    t.tenant_id))):
+            if remaining <= 0:
+                break
+            caps[t.tenant_id] += 1
+            remaining -= 1
+        self.caps = caps
+        self._seeded_for = frozenset(caps)
+
+    def slot_cap(self, sched: "StreamScheduler", tenant: Tenant) -> int:
+        if frozenset(sched.tenants) != self._seeded_for:
+            self._seed(sched)
+        return self.caps[tenant.tenant_id]
+
+    # -- the online loop ----------------------------------------------------
+    def on_step(self, sched: "StreamScheduler") -> None:
+        if sched.step_count == 0 or sched.step_count % self.interval:
+            return
+        if frozenset(sched.tenants) != self._seeded_for:
+            self._seed(sched)
+        tracer = sched.tracer
+        if tracer is None:
+            return
+        lats = tracer.tenant_latencies(self.metric)
+        ratios: Dict[str, float] = {}
+        for tid, ls in lats.items():
+            if tid not in self.caps or len(ls) < self.min_samples:
+                continue
+            p = cc.latency_percentiles(ls)
+            if p["p50"] > 0:
+                ratios[tid] = p["p99"] / p["p50"]
+        if len(ratios) < 2:
+            return                       # nothing to compare against
+        median = float(np.median(list(ratios.values())))
+        outliers = [tid for tid, r in ratios.items()
+                    if r > self.outlier_factor * max(1.0, median)]
+        if not outliers:
+            return
+        self.recalcs += 1
+        freed = 0
+        for tid in outliers:
+            if self.caps[tid] > 1:
+                self.caps[tid] -= 1
+                self.shrunk[tid] = self.shrunk.get(tid, 0) + 1
+                freed += 1
+        if not freed:
+            return
+        # grant the freed share to the best-behaved tenants (backlogged
+        # first, then idle — the budget must be conserved, not leak when
+        # every victim's queue is momentarily empty), lowest tail ratio
+        # first, registration order breaking ties, aggregate at/below the
+        # budget
+        budget = self.budget(sched)
+        grantees = sorted(
+            (tid for tid in sched._order if tid not in outliers),
+            key=lambda tid: (not sched.tenants[tid].queue,
+                             ratios.get(tid, float("inf")),
+                             sched._order.index(tid)))
+        for tid in grantees:
+            if freed <= 0 or sum(self.caps.values()) >= budget:
+                break
+            if self.caps[tid] < budget:
+                self.caps[tid] += 1
+                freed -= 1
+        tracer.record("quota", step=sched.step_count,
+                      meta={"caps": dict(self.caps),
+                            "outliers": list(outliers),
+                            "median_ratio": median})
+
+
+def make_quota(quota: Union[None, str, QuotaPolicy]) -> QuotaPolicy:
+    """``None``/``"static"``/``"adaptive"``/instance → a QuotaPolicy."""
+    if quota is None or quota == "static":
+        return StaticQuota()
+    if quota == "adaptive":
+        return AdaptiveQuota()
+    if isinstance(quota, QuotaPolicy):
+        return quota
+    raise ValueError(f"quota {quota!r} not in {QUOTA_POLICIES} and not a "
+                     "QuotaPolicy instance")
 
 
 class StreamScheduler:
@@ -140,12 +310,22 @@ class StreamScheduler:
     def __init__(self, session: ServeSession, *,
                  admission: str = "fair_quantum",
                  advisor: Optional[cc.OccupancyAdvisor] = None,
-                 tracer=None):
+                 tracer=None, quota: Union[None, str, QuotaPolicy] = None):
         if admission not in ADMISSION_POLICIES:
             raise ValueError(f"admission {admission!r} not in "
                              f"{ADMISSION_POLICIES}")
         self.session = session
         self.admission = admission
+        self.quota = make_quota(quota)
+        if isinstance(self.quota, AdaptiveQuota) and tracer is None:
+            # the adaptive loop needs the per-tenant percentiles: reuse
+            # the session's tracer when it already has one (taking it
+            # over below would otherwise silently starve it), else build
+            # a private one
+            tracer = session.tracer
+            if tracer is None:
+                from repro.runtime import telemetry
+                tracer = telemetry.Tracer()
         # Default quota advisor: the calibrated one when autotune.install()
         # has loaded a measured artifact, else the §9.2-constant advisor.
         self.advisor = advisor or ex.get_default_advisor()
@@ -196,7 +376,7 @@ class StreamScheduler:
     def pending(self) -> int:
         return sum(len(t.queue) for t in self.tenants.values())
 
-    def _slot_cap(self, t: Tenant) -> int:
+    def _advisor_cap(self) -> int:
         if self._default_cap is None:
             # §9.2 default quota: the advisor's stream cap for a
             # latency-sensitive workload with this many co-tenants.
@@ -207,7 +387,10 @@ class StreamScheduler:
                 latency_sensitive=True,
                 concurrent_tenants=max(1, len(self.tenants))))
             self._default_cap = max(1, advice.max_streams)
-        return t.slot_cap(self._default_cap)
+        return self._default_cap
+
+    def _slot_cap(self, t: Tenant) -> int:
+        return self.quota.slot_cap(self, t)
 
     # -- admission policies -------------------------------------------------
     def _admissible(self) -> List[Tenant]:
@@ -272,6 +455,7 @@ class StreamScheduler:
         Returns the requests that completed this step."""
         if self._t0 is None:
             self._t0 = time.perf_counter()
+        self.quota.on_step(self)
         self._admit_free_slots()
         done = self.session.decode_once()
         self.step_count += 1
@@ -316,6 +500,7 @@ class StreamScheduler:
         busy = sum(t.service_steps for t in self.tenants.values())
         return SchedulerReport(
             admission=self.admission,
+            quota=self.quota.name,
             n_tenants=len(self.tenants),
             steps=self.step_count,
             wall_s=self._wall_s,
@@ -332,10 +517,13 @@ def run_tenants(session: ServeSession, workloads: Dict[str, Sequence[Request]],
                 *, admission: str = "fair_quantum",
                 weights: Optional[Dict[str, float]] = None,
                 policies: Optional[Dict[str, ex.ExecutionPolicy]] = None,
-                max_steps: int = 100_000, tracer=None) -> SchedulerReport:
+                max_steps: int = 100_000, tracer=None,
+                quota: Union[None, str, QuotaPolicy] = None
+                ) -> SchedulerReport:
     """One-shot helper: register tenants, submit their workloads up front,
     run to completion, return the report (benchmarks and the launcher)."""
-    sched = StreamScheduler(session, admission=admission, tracer=tracer)
+    sched = StreamScheduler(session, admission=admission, tracer=tracer,
+                            quota=quota)
     for tid in workloads:
         sched.add_tenant(tid, weight=(weights or {}).get(tid, 1.0),
                          policy=(policies or {}).get(tid))

@@ -64,6 +64,7 @@ class Event:
     stream: int = -1
     tenant: str = ""
     step: int = -1
+    partition: int = -1              # spatial sub-mesh id (-1: unpartitioned)
     meta: Dict[str, Any] = dataclasses.field(default_factory=dict)
 
     @property
@@ -87,11 +88,16 @@ class Tracer:
     record concurrently.
     """
 
-    def __init__(self, capacity: int = 4096, ema_alpha: float = 0.25):
+    def __init__(self, capacity: int = 4096, ema_alpha: float = 0.25,
+                 partition: int = -1):
         if capacity <= 0:
             raise ValueError("capacity must be positive")
         self.capacity = capacity
         self.ema_alpha = ema_alpha
+        # Default partition tag stamped onto every event recorded here that
+        # doesn't carry one (a per-partition tracer inside PartitionedServer
+        # tags its whole stream so Tracer.merge keeps provenance).
+        self.partition = partition
         self._ring: deque = deque(maxlen=capacity)
         self._counts: Dict[str, int] = {}
         self._tenant_counts: Dict[Tuple[str, str], int] = {}
@@ -100,12 +106,20 @@ class Tracer:
 
     # -- recording ----------------------------------------------------------
     def record(self, kind: str, **fields) -> Event:
+        fields.setdefault("partition", self.partition)
         ev = Event(kind=kind, t=time.perf_counter(), **fields)
+        self._ingest(ev)
+        return ev
+
+    def _ingest(self, ev: Event) -> None:
+        """Fold one already-built event in: ring append + every counter,
+        all under the lock (concurrent emitters — multi-partition steps,
+        ``run_async_dispatch`` threads — may interleave)."""
         with self._lock:
             self._ring.append(ev)
-            self._counts[kind] = self._counts.get(kind, 0) + 1
+            self._counts[ev.kind] = self._counts.get(ev.kind, 0) + 1
             if ev.tenant:
-                tkey = (kind, ev.tenant)
+                tkey = (ev.kind, ev.tenant)
                 self._tenant_counts[tkey] = self._tenant_counts.get(
                     tkey, 0) + 1
             if ev.wall_s > 0 and ev.m and ev.k and ev.n:
@@ -113,7 +127,6 @@ class Tracer:
                 prev = self._ema.get(key)
                 self._ema[key] = ev.wall_s if prev is None else \
                     (1 - self.ema_alpha) * prev + self.ema_alpha * ev.wall_s
-        return ev
 
     def record_matmul(self, m: int, k: int, n: int, *, precision: str = "",
                       backend: str = "", policy: str = "",
@@ -187,22 +200,36 @@ class Tracer:
             return {tenant: c for (k, tenant), c
                     in self._tenant_counts.items() if k == kind}
 
-    def tenant_latencies(self) -> Dict[str, List[float]]:
+    def tenant_latencies(self, metric: str = "wall_s"
+                         ) -> Dict[str, List[float]]:
         """Per-tenant request-latency samples over the *retained window*
         (the newest ``capacity`` events): a sliding view by design — the
-        quota loop wants recent behavior, not all-time history."""
+        quota loop wants recent behavior, not all-time history.
+
+        ``metric`` selects the latency domain: ``"wall_s"`` (wall-clock
+        seconds) or ``"turnaround_steps"`` (deterministic scheduler steps,
+        carried in the request event's meta — what :class:`~repro.runtime.
+        scheduler.AdaptiveQuota` consumes so quota decisions are
+        reproducible run-to-run)."""
         out: Dict[str, List[float]] = {}
         for ev in self.events("request"):
-            if ev.tenant:
+            if not ev.tenant:
+                continue
+            if metric == "wall_s":
                 out.setdefault(ev.tenant, []).append(ev.wall_s)
+            else:
+                v = ev.meta.get(metric)
+                if v is not None and v >= 0:
+                    out.setdefault(ev.tenant, []).append(float(v))
         return out
 
-    def tenant_percentiles(self) -> Dict[str, Dict[str, float]]:
+    def tenant_percentiles(self, metric: str = "wall_s"
+                           ) -> Dict[str, Dict[str, float]]:
         """Per-tenant p50/p99 of request latency over the retained window
         — the signal the fair_quantum quota loop consumes instead of
         static stream budgets."""
         return {t: cc.latency_percentiles(ls)
-                for t, ls in self.tenant_latencies().items()}
+                for t, ls in self.tenant_latencies(metric).items()}
 
     def tenant_fairness(self) -> float:
         """Paper fairness index over per-tenant mean request latency
@@ -210,6 +237,58 @@ class Tracer:
         means = [float(np.mean(ls)) for ls in self.tenant_latencies().values()
                  if ls]
         return cc.fairness(means)
+
+    def partition_counts(self, kind: Optional[str] = None) -> Dict[int, int]:
+        """Events per partition tag over the retained window (fused-report
+        provenance view: which sub-mesh produced what)."""
+        out: Dict[int, int] = {}
+        for ev in self.events(kind):
+            out[ev.partition] = out.get(ev.partition, 0) + 1
+        return out
+
+    def mean_wall(self, kind: str) -> float:
+        """Mean measured wall seconds of a kind over the retained window
+        (0.0 with no measured samples). ``load_aware`` placement reads the
+        per-partition ``decode`` mean as its congestion signal."""
+        walls = [e.wall_s for e in self.events(kind) if e.wall_s > 0]
+        return float(np.mean(walls)) if walls else 0.0
+
+    # -- merging (fused multi-partition view) -------------------------------
+    @classmethod
+    def merge(cls, *tracers: "Tracer") -> "Tracer":
+        """Fuse several tracers (one per spatial partition) into one view.
+
+        The merged ring replays every retained event in timestamp order
+        (capacity = sum of the sources', so nothing retained is dropped);
+        monotonic counters are *summed from the sources' counters* — they
+        stay exact even where the source rings have already evicted.
+        Partition tags on the events are preserved, so per-partition
+        provenance survives the merge."""
+        if not tracers:
+            return cls()
+        merged = cls(capacity=sum(t.capacity for t in tracers),
+                     ema_alpha=tracers[0].ema_alpha)
+        events: List[Event] = []
+        for tr in tracers:
+            events.extend(tr.events())
+        for ev in sorted(events, key=lambda e: e.t):
+            merged._ring.append(ev)
+            if ev.wall_s > 0 and ev.m and ev.k and ev.n:
+                key = (ev.m, ev.k, ev.n, ev.precision)
+                prev = merged._ema.get(key)
+                merged._ema[key] = ev.wall_s if prev is None else \
+                    (1 - merged.ema_alpha) * prev \
+                    + merged.ema_alpha * ev.wall_s
+        for tr in tracers:
+            with tr._lock:
+                counts = dict(tr._counts)
+                tcounts = dict(tr._tenant_counts)
+            for k, v in counts.items():
+                merged._counts[k] = merged._counts.get(k, 0) + v
+            for k, v in tcounts.items():
+                merged._tenant_counts[k] = \
+                    merged._tenant_counts.get(k, 0) + v
+        return merged
 
     def stream_overlap(self) -> float:
         """Overlap efficiency implied by the recorded stream events (serial
@@ -247,6 +326,10 @@ class Tracer:
                 f"p99={pcts[t]['p99'] * 1e3:.1f}ms"
                 for t, c in sorted(tcounts.items())))
             lines.append(f"  tenant fairness={self.tenant_fairness():.3f}")
+        parts = {p: c for p, c in self.partition_counts().items() if p >= 0}
+        if parts:
+            lines.append("  partitions: " + " ".join(
+                f"p{p}:{c}" for p, c in sorted(parts.items())))
         return "\n".join(lines)
 
 

@@ -1,0 +1,374 @@
+"""Partitioned serving runtime: device partitions, tenant routing,
+fused telemetry, and telemetry-driven adaptive quotas.
+
+The behavioral contracts of the partition layer:
+
+* routing is deterministic — same tenants + weights → same placement;
+* serving is *partition-local* — a multi-partition run produces exactly
+  the tokens each partition's tenants would produce served solo, and a
+  1-partition server reproduces the plain ``StreamScheduler`` run
+  token-for-token;
+* ``Tracer.merge`` fuses per-partition telemetry with exact counters;
+* ``AdaptiveQuota`` converges: a hogging tenant's slot cap shrinks and
+  the remaining tenants stay fair.
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_reduced
+from repro.models import init_params
+from repro.models.layers import RuntimeCfg
+from repro.runtime import telemetry
+from repro.runtime.partition import (
+    PLACEMENTS, DevicePartition, PartitionedServer, make_partitions,
+    run_partitioned)
+from repro.runtime.scheduler import (
+    AdaptiveQuota, StaticQuota, StreamScheduler, make_quota, run_tenants)
+from repro.runtime.serve_loop import Request, ServeSession
+
+RT = RuntimeCfg(ssm_chunk=16)
+MAX_LEN = 64
+
+
+@pytest.fixture(scope="module")
+def model():
+    cfg = get_reduced("llama3-8b")
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    return cfg, params
+
+
+def _requests(cfg, tenant_idx, n=2, max_new=6, length=5):
+    rng = np.random.default_rng(tenant_idx)
+    return [Request(uid=tenant_idx * 100 + j,
+                    prompt=rng.integers(0, cfg.vocab_size, length)
+                    .astype(np.int32), max_new=max_new)
+            for j in range(n)]
+
+
+def _server(model, **kw):
+    cfg, params = model
+    kw.setdefault("batch_slots", 2)
+    kw.setdefault("max_len", MAX_LEN)
+    kw.setdefault("rt", RT)
+    return PartitionedServer(params, cfg, **kw)
+
+
+# ---------------------------------------------------------------------------
+# Partitions
+# ---------------------------------------------------------------------------
+
+def test_make_partitions_disjoint():
+    devs = tuple(f"dev{i}" for i in range(8))
+    parts = make_partitions(3, devices=devs)
+    assert [len(p.devices) for p in parts] == [3, 3, 2]
+    seen = [d for p in parts for d in p.devices]
+    assert len(seen) == len(set(seen)) == 8        # disjoint, complete
+    assert not any(p.logical for p in parts)
+
+
+def test_make_partitions_single_device_fallback():
+    """CPU CI: fewer devices than partitions → logical partitions that
+    share the device but are fully separate serving states."""
+    parts = make_partitions(4, devices=("cpu0",))
+    assert len(parts) == 4
+    assert all(p.logical for p in parts)
+    assert [p.index for p in parts] == [0, 1, 2, 3]
+    with pytest.raises(ValueError):
+        make_partitions(0)
+
+
+# ---------------------------------------------------------------------------
+# Routing
+# ---------------------------------------------------------------------------
+
+TENANTS = (("a", 2.0), ("b", 1.0), ("c", 1.0), ("d", 3.0), ("e", 1.0))
+
+
+@pytest.mark.parametrize("placement", PLACEMENTS)
+def test_placement_deterministic(model, placement):
+    """Same tenants + weights registered in the same order land on the
+    same partitions, every time (acceptance criterion)."""
+    def place():
+        srv = _server(model, n_partitions=3, placement=placement)
+        for tid, w in TENANTS:
+            srv.add_tenant(tid, weight=w)
+        return dict(srv.tenant_partition)
+
+    first = place()
+    assert place() == first
+    assert set(first.values()) <= {0, 1, 2}
+
+
+def test_packed_fills_partitions_in_order(model):
+    srv = _server(model, n_partitions=2, placement="packed", batch_slots=2)
+    assert [srv.add_tenant(f"t{i}") for i in range(5)] == [0, 0, 1, 1, 0]
+
+
+def test_spread_balances_by_weight(model):
+    srv = _server(model, n_partitions=2, placement="spread")
+    assert srv.add_tenant("heavy", weight=3.0) == 0
+    assert srv.add_tenant("light1", weight=1.0) == 1
+    assert srv.add_tenant("light2", weight=1.0) == 1   # 3.0 vs 1.0 -> p1
+    assert srv.add_tenant("light3", weight=1.0) == 1   # 3.0 vs 2.0 -> p1
+
+
+def test_load_aware_follows_measured_congestion(model):
+    """With traffic only on partition 0, load_aware routes the next
+    tenant to the idle partition even when registered weights tie."""
+    cfg, _ = model
+    srv = _server(model, n_partitions=2, placement="load_aware")
+    srv.add_tenant("busy", partition=0)
+    srv.add_tenant("idle_holder", partition=1)
+    for req in _requests(cfg, 0, n=2, max_new=4):
+        srv.submit("busy", req)
+    srv.run()
+    # partition 0 now carries decode EMA signal but no backlog — weights
+    # tie at 1.0 each, so the index tiebreak would pick 0; give 0 backlog
+    # so its measured load is visible
+    for req in _requests(cfg, 1, n=1, max_new=4):
+        srv.submit("busy", req)
+    assert srv.add_tenant("newcomer") == 1
+
+
+# ---------------------------------------------------------------------------
+# Partition-local execution (token equality)
+# ---------------------------------------------------------------------------
+
+def test_single_partition_reproduces_stream_scheduler(model):
+    """A 1-partition server is the old stack: same admitted order, same
+    tokens, token-for-token (acceptance criterion)."""
+    cfg, params = model
+    wl_a = {f"t{i}": _requests(cfg, i) for i in range(3)}
+    wl_b = {f"t{i}": _requests(cfg, i) for i in range(3)}
+
+    srv = _server(model, n_partitions=1, placement="packed",
+                  admission="fair_quantum", batch_slots=2)
+    for tid in wl_a:
+        srv.add_tenant(tid)
+    for tid, reqs in wl_a.items():
+        for r in reqs:
+            srv.submit(tid, r)
+    srv.run()
+
+    sess = ServeSession(params, cfg, batch_slots=2, max_len=MAX_LEN, rt=RT)
+    run_tenants(sess, wl_b, admission="fair_quantum")
+
+    (sched,) = srv.schedulers
+    for tid in wl_a:
+        for a, b in zip(wl_a[tid], wl_b[tid]):
+            assert a.done and b.done
+            assert a.out == b.out, f"{tid} diverged"
+    assert sched.admitted_order           # sanity: the facade admitted
+
+
+def test_multi_partition_equals_solo_runs_token_for_token(model):
+    """Each tenant's tokens in a 2-partition shared run match the same
+    tenant served in a solo scheduler on a fresh session — partitions
+    are isolation domains (acceptance criterion)."""
+    cfg, params = model
+    shared = {f"t{i}": _requests(cfg, i) for i in range(4)}
+    srv = _server(model, n_partitions=2, placement="spread",
+                  admission="fair_quantum", batch_slots=2)
+    for tid in shared:
+        srv.add_tenant(tid)
+    for tid, reqs in shared.items():
+        for r in reqs:
+            srv.submit(tid, r)
+    srv.run()
+    assert set(srv.tenant_partition.values()) == {0, 1}
+
+    for i in range(4):
+        solo = {f"t{i}": _requests(cfg, i)}
+        sess = ServeSession(params, cfg, batch_slots=2, max_len=MAX_LEN,
+                            rt=RT)
+        run_tenants(sess, solo, admission="fair_quantum")
+        for a, b in zip(shared[f"t{i}"], solo[f"t{i}"]):
+            assert a.out == b.out, f"t{i} diverged from solo run"
+
+
+# ---------------------------------------------------------------------------
+# Fused telemetry (Tracer.merge)
+# ---------------------------------------------------------------------------
+
+def test_tracer_merge_counts_exact_and_percentiles_fused():
+    """Counts survive source-ring eviction (summed from monotonic
+    counters); percentile views fuse the retained windows; partition
+    tags are preserved (acceptance criterion)."""
+    t0 = telemetry.Tracer(capacity=4, partition=0)
+    t1 = telemetry.Tracer(capacity=64, partition=1)
+    for i in range(10):                   # 6 evicted from t0's ring
+        t0.record_request("alpha", wall_s=0.010, tokens=1)
+    for w in (0.1, 0.2, 0.3, 0.4):
+        t1.record_request("beta", wall_s=w, tokens=1)
+
+    merged = telemetry.Tracer.merge(t0, t1)
+    assert merged.counts()["request"] == 14
+    assert merged.tenant_counts("request") == {"alpha": 10, "beta": 4}
+    assert len(merged) == 8               # retained windows: 4 + 4
+    assert merged.partition_counts("request") == {0: 4, 1: 4}
+
+    pcts = merged.tenant_percentiles()
+    assert pcts["alpha"]["p50"] == pytest.approx(0.010)
+    assert pcts["beta"]["p50"] == pytest.approx(np.percentile(
+        [0.1, 0.2, 0.3, 0.4], 50))
+    assert pcts["beta"]["p99"] == pytest.approx(np.percentile(
+        [0.1, 0.2, 0.3, 0.4], 99))
+    # events replayed in timestamp order
+    ts = [e.t for e in merged.events()]
+    assert ts == sorted(ts)
+    assert telemetry.Tracer.merge().counts() == {}
+
+
+def test_partitioned_server_merged_tracer(model):
+    cfg, _ = model
+    srv = _server(model, n_partitions=2, placement="spread")
+    for i in range(2):
+        srv.add_tenant(f"t{i}")
+        for r in _requests(cfg, i, n=1, max_new=4):
+            srv.submit(f"t{i}", r)
+    srv.run()
+    merged = srv.merged_tracer()
+    assert merged.tenant_counts("request") == {"t0": 1, "t1": 1}
+    parts = merged.partition_counts("request")
+    assert parts == {0: 1, 1: 1}
+    assert "partitions:" in merged.summary()
+
+
+# ---------------------------------------------------------------------------
+# Adaptive quotas
+# ---------------------------------------------------------------------------
+
+def test_make_quota_specs():
+    assert isinstance(make_quota(None), StaticQuota)
+    assert isinstance(make_quota("static"), StaticQuota)
+    assert isinstance(make_quota("adaptive"), AdaptiveQuota)
+    aq = AdaptiveQuota(interval=3)
+    assert make_quota(aq) is aq
+    with pytest.raises(ValueError):
+        make_quota("lottery")
+    with pytest.raises(ValueError):
+        AdaptiveQuota(interval=0)
+
+
+def test_static_quota_unchanged_behavior(model):
+    """The refactor's null hypothesis: a default scheduler resolves the
+    same caps as before (tenant stream budget, else advisor cap)."""
+    cfg, params = model
+    sess = ServeSession(params, cfg, batch_slots=4, max_len=MAX_LEN, rt=RT)
+    sched = StreamScheduler(sess, admission="fair_quantum")
+    assert isinstance(sched.quota, StaticQuota)
+    t = sched.add_tenant("t0")
+    assert sched._slot_cap(t) == sched._advisor_cap()
+
+
+def test_adaptive_quota_seeds_weighted_share(model):
+    cfg, params = model
+    sess = ServeSession(params, cfg, batch_slots=4, max_len=MAX_LEN, rt=RT)
+    sched = StreamScheduler(sess, admission="fair_quantum",
+                            quota="adaptive")
+    assert sched.tracer is not None       # private tracer auto-created
+    heavy = sched.add_tenant("heavy", weight=2.0)
+    light = sched.add_tenant("light", weight=1.0)
+    assert sched._slot_cap(heavy) == 3    # floor(4*2/3)=2 (+1 remainder)
+    assert sched._slot_cap(light) == 1
+    caps = sched.quota.caps
+    assert sum(caps.values()) <= max(4, 2)
+
+
+def test_adaptive_quota_shrinks_hog_and_keeps_victims_fair(model):
+    """Convergence (acceptance criterion): a tenant that floods the
+    partition with a deep backlog — the outlier p99/p50 turnaround tail —
+    loses slot quota online, while the steady tenants stay fair among
+    themselves (fairness >= 0.8). The hog's own mean turnaround is
+    structurally larger (it queued 5x the work), so fairness is asserted
+    over the victims the quota loop is protecting."""
+    cfg, params = model
+    sess = ServeSession(params, cfg, batch_slots=4, max_len=MAX_LEN, rt=RT)
+    aq = AdaptiveQuota(interval=4)
+    sched = StreamScheduler(sess, admission="fair_quantum", quota=aq)
+    sched.add_tenant("hog")
+    sched.add_tenant("v1")
+    sched.add_tenant("v2")
+    for r in _requests(cfg, 0, n=10, max_new=6):
+        sched.submit("hog", r)
+    cap0 = sched._slot_cap(sched.tenants["hog"])
+    assert cap0 == 2                      # 4 slots / 3 equal tenants (+rem)
+
+    # steady latency-sensitive victims: one short request each, every few
+    # steps — their turnaround stays flat, the hog's tail stretches
+    rng = np.random.default_rng(9)
+    for round_ in range(5):
+        sched.submit("v1", Request(
+            uid=1000 + round_, max_new=3,
+            prompt=rng.integers(0, cfg.vocab_size, 4).astype(np.int32)))
+        sched.submit("v2", Request(
+            uid=2000 + round_, max_new=3,
+            prompt=rng.integers(0, cfg.vocab_size, 4).astype(np.int32)))
+        for _ in range(6):
+            sched.step()
+    sched.run(max_steps=2000)
+
+    assert aq.recalcs >= 1, "quota loop never re-derived caps"
+    assert aq.shrunk.get("hog", 0) >= 1, "hog quota never shrunk"
+    assert aq.caps["hog"] < cap0
+    # budget conserved, not leaked: every slot the hog lost was granted
+    # to someone (even a momentarily idle victim)
+    assert sum(aq.caps.values()) == max(sess.batch_slots,
+                                        len(sched.tenants))
+    rep = sched.report()
+    victim_ta = [t.mean_turnaround_steps for t in rep.tenants
+                 if t.tenant_id != "hog"]
+    from repro.core.concurrency import fairness
+    assert fairness(victim_ta) >= 0.8, rep.summary()
+    # every submitted request still completes — shrinking quotas must
+    # never starve anyone out entirely
+    assert all(t.completed for t in rep.tenants)
+
+
+def test_partitioned_fairness_beats_single_fifo(model):
+    """The fig18 headline at test scale: single-partition FIFO collapses
+    cross-tenant fairness; 2 partitions with load-aware placement and
+    adaptive quotas restore it at no worse step-domain throughput."""
+    cfg, params = model
+
+    def wl():
+        return {f"t{i}": _requests(cfg, i, n=2, max_new=6)
+                for i in range(4)}
+
+    fifo = run_partitioned(params, cfg, wl(), n_partitions=1,
+                           placement="packed", admission="fifo",
+                           quota="static", batch_slots=2,
+                           max_len=MAX_LEN, rt=RT)
+    part = run_partitioned(params, cfg, wl(), n_partitions=2,
+                           placement="load_aware",
+                           admission="fair_quantum", quota="adaptive",
+                           batch_slots=2, max_len=MAX_LEN, rt=RT)
+    assert part.fairness >= 0.8, part.summary()
+    assert fifo.fairness < part.fairness
+    assert part.tokens_out == fifo.tokens_out
+    assert part.tokens_out / part.steps >= fifo.tokens_out / fifo.steps
+    assert part.quota == "adaptive" and fifo.quota == "static"
+    d = part.to_dict()
+    assert d["n_partitions"] == 2 and len(d["partitions"]) == 2
+
+
+def test_shared_quota_instance_rejected_across_partitions(model):
+    with pytest.raises(ValueError):
+        _server(model, n_partitions=2, quota=AdaptiveQuota())
+    aq = AdaptiveQuota()
+    with pytest.raises(ValueError):       # same instance smuggled in a list
+        _server(model, n_partitions=2, quota=[aq, aq])
+    with pytest.raises(ValueError):       # wrong sequence length
+        _server(model, n_partitions=3, quota=["adaptive", "static"])
+    srv = _server(model, n_partitions=2,
+                  quota=[AdaptiveQuota(), AdaptiveQuota()])
+    assert all(isinstance(s.quota, AdaptiveQuota)
+               for s in srv.schedulers)
+    # repeated *specs* are fine: each partition instantiates its own
+    srv2 = _server(model, n_partitions=2, quota=("adaptive", "adaptive"))
+    q0, q1 = (s.quota for s in srv2.schedulers)
+    assert isinstance(q0, AdaptiveQuota) and isinstance(q1, AdaptiveQuota)
+    assert q0 is not q1
+    with pytest.raises(ValueError):
+        _server(model, n_partitions=1, placement="nearest")

@@ -62,6 +62,40 @@ def test_tenant_counts_exact_after_ring_eviction():
     assert sum(len(v) for v in tr.tenant_latencies().values()) == 8
 
 
+def test_record_safe_under_concurrent_emitters():
+    """Regression: ring append + monotonic counters must be guarded — the
+    serving loop, ``run_async_dispatch`` stream threads, and
+    multi-partition steps record into one tracer concurrently. Hammer
+    ``record`` from many threads and require *exact* counter totals (a
+    lost update under a race shows up as a short count)."""
+    import threading
+
+    tr = telemetry.Tracer(capacity=256)
+    n_threads, per_thread = 8, 500
+    start = threading.Barrier(n_threads)
+
+    def hammer(tid):
+        start.wait()
+        for i in range(per_thread):
+            tr.record("matmul", m=128, k=128, n=128, wall_s=1e-4,
+                      tenant=f"t{tid}")
+            tr.record_request(f"t{tid}", wall_s=1e-3, tokens=1)
+
+    threads = [threading.Thread(target=hammer, args=(t,))
+               for t in range(n_threads)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    counts = tr.counts()
+    assert counts["matmul"] == n_threads * per_thread
+    assert counts["request"] == n_threads * per_thread
+    assert tr.tenant_counts("request") == {
+        f"t{t}": per_thread for t in range(n_threads)}
+    assert len(tr) == 256                 # ring stayed capacity-bounded
+    assert (128, 128, 128, "") in tr.shape_latency_ema()
+
+
 def test_shape_latency_ema_converges():
     tr = telemetry.Tracer(ema_alpha=0.5)
     for w in (0.1, 0.2, 0.2, 0.2):
@@ -341,6 +375,70 @@ def test_record_serializer_roundtrip(tmp_path):
     assert loaded[0]["derived"]["gflops"] == 99.0
     st = autotune.AutotuneStore(str(tmp_path))
     assert st.add_records(recs) == 2         # same rows ingest as evidence
+
+
+# ---------------------------------------------------------------------------
+# Block-shape sweep calibration (alternative tilings, winner persisted)
+# ---------------------------------------------------------------------------
+
+def test_block_candidates_distinct_and_clamped():
+    from repro.core.characterization import block_candidates
+    cands = block_candidates(128, 256, 512, "fp8")
+    assert 2 <= len(cands) <= 3
+    assert len(set(cands)) == len(cands)          # deduplicated
+    for bm, bn, bk in cands:
+        assert bm <= 128 and bn <= 256 and bk <= 512
+    # fp8's preferred deep-K tiling is among the candidates
+    assert (128, 256, 512) in cands
+    # a tiny problem collapses every candidate to the problem itself
+    assert block_candidates(128, 128, 128, "bf16") == [(128, 128, 128)]
+
+
+def _sweep_records():
+    from repro.core.characterization import Record
+    rows = [("128x128x256", 9.0), ("128x128x128", 5.0), ("64x64x256", 7.0)]
+    return [Record(f"blocksweep/bf16/128x128x256/{blocks}", us,
+                   {"m": 128, "n": 128, "k": 256, "precision": "bf16",
+                    "blocks": blocks, "winner": us == 5.0})
+            for blocks, us in rows]
+
+
+def test_blocksweep_records_persist_winning_tiling(tmp_path):
+    """The sweep's fastest *measured* tiling — not a clamped prior — is
+    what the store keeps and what a fresh cache serves back."""
+    st = autotune.AutotuneStore(str(tmp_path))
+    assert st.add_records(_sweep_records()) == 3
+    blocks, secs = st.blocks[(128, 256, 128, "bf16")]
+    assert blocks == (128, 128, 128) and secs == pytest.approx(5e-6)
+    st.save()
+    st2 = autotune.AutotuneStore(str(tmp_path))
+    assert st2.load()
+    cache = ex.BlockShapeCache(seed=False)
+    st2.apply(cache)
+    assert cache.lookup(128, 256, 128, jnp.bfloat16) == (128, 128, 128)
+
+
+def test_blocksweep_records_seed_block_cache_directly():
+    cache = ex.BlockShapeCache(seed=False)
+    assert ex.seed_cache_from_records(_sweep_records(), cache) == 3
+    assert cache.lookup(128, 256, 128, jnp.bfloat16) == (128, 128, 128)
+
+
+def test_block_sweep_probe_measures_alternative_tilings():
+    """One real (tiny) sweep through the Pallas interpret path: every
+    candidate tiling is measured, exactly one winner per (shape,
+    precision) group, and the records round-trip into the store."""
+    from repro.core.characterization import block_sweep_probe
+    recs = block_sweep_probe(shapes=((128, 128, 128),),
+                             precisions=("bf16",), iters=1)
+    assert len(recs) >= 1
+    assert all(r.name.startswith("blocksweep/bf16/128x128x128/")
+               for r in recs)
+    assert sum(r.derived["winner"] for r in recs) == 1
+    st = autotune.AutotuneStore()
+    assert st.add_records(recs) == len(recs)
+    blocks, secs = st.blocks[(128, 128, 128, "bf16")]
+    assert secs == min(r.us_per_call for r in recs) * 1e-6
 
 
 # ---------------------------------------------------------------------------
