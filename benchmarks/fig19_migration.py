@@ -1,0 +1,171 @@
+"""Fig 19 (beyond-paper) — live tenant migration + heterogeneous
+per-partition execution policies.
+
+The PR 4 router pinned tenants to their registration-time partition
+forever and ran ONE execution policy everywhere. The paper's §5/§6/§7
+finding is that the right FP8/sparse24 decision is context-dependent, and
+the placement studies (PAPERS.md) argue tenants should follow capacity.
+This benchmark runs a load-skewed tenant mix twice through the
+``ServingRuntime`` control plane (runtime/server.py):
+
+* **static** — the PR 4 baseline: load_aware registration-time placement,
+  uniform bf16 policy, no migration. The flooding tenant shares its
+  partition with a latency-sensitive victim for the whole run while a
+  spare partition idles.
+* **runtime** — heterogeneous per-partition policies (a throughput
+  partition on ``fp8:sparse24`` while the latency partitions stay bf16)
+  plus live migration: the load_aware re-route path detects the skew,
+  freezes the flooding tenant, hands its in-flight request's KV/SSM cache
+  state to the idle spare partition mid-stream, and moves its backlog.
+
+Headline asserts (checked by the CI smoke and tests/test_server.py):
+≥ 1 live migration fires; every tenant — including the one whose request
+crossed partitions mid-flight — is token-for-token equal to its solo run;
+victim-population fairness ≥ 0.8 (vs collapse under the static router;
+the flood source's self-queued turnaround is reported separately, as in
+the fig18 adaptive-quota study); aggregate tokens/step ≥ the static
+baseline. Step-domain numbers are deterministic; wall tok/s rides along
+(on real hardware the fp8/sparse24 partition also wins wall-clock).
+"""
+import jax
+import numpy as np
+
+from repro.configs import get_reduced
+from repro.core import execution as ex
+from repro.core.characterization import Record
+from repro.core.concurrency import fairness
+from repro.models import init_params
+from repro.models.layers import RuntimeCfg
+from repro.runtime.serve_loop import Request, ServeSession
+from repro.runtime.server import (
+    MigrationSpec, PartitionSpec, ServingRuntime, ServingSpec)
+
+RT = RuntimeCfg(ssm_chunk=16)
+SLOTS = 2
+MAX_LEN = 64
+BF16 = "bf16:dense:jnp"
+FP8SP = "fp8:sparse24:jnp"
+HOG, VICTIMS = "hog", ("victim", "lat", "thr")
+PINS = {"hog": 0, "victim": 0, "lat": 1, "thr": 2}   # partition 3: spare
+
+
+def _spec(heterogeneous: bool, migrate: bool) -> ServingSpec:
+    pols = [BF16, BF16, FP8SP if heterogeneous else BF16, BF16]
+    return ServingSpec(
+        partitions=tuple(PartitionSpec(policy=p) for p in pols),
+        placement="load_aware", batch_slots=SLOTS, max_len=MAX_LEN,
+        migration=MigrationSpec(enabled=migrate, interval=4,
+                                threshold=2.0, cooldown=16,
+                                max_migrations=4))
+
+
+def _schedule(cfg):
+    """step -> [(tenant, Request)]: one tenant floods at step 0, the
+    other three trickle identical short requests — the skewed mix."""
+    rng = np.random.default_rng(0)
+    sched = {}
+
+    def sub(step, tid, uid, max_new):
+        prompt = rng.integers(0, cfg.vocab_size, 4).astype(np.int32)
+        sched.setdefault(step, []).append(
+            (tid, Request(uid=uid, prompt=prompt, max_new=max_new)))
+
+    for j in range(8):
+        sub(0, HOG, j, 16)
+    for i, tid in enumerate(VICTIMS):
+        for j in range(4):
+            sub(8 * j, tid, 100 * (i + 1) + j, 6)
+    return sched
+
+
+def _drive(runtime: ServingRuntime, schedule):
+    last = max(schedule)
+    while (runtime.pending() or runtime.n_active or runtime._draining
+           or runtime.step_count <= last):
+        for tid, req in schedule.get(runtime.step_count, ()):
+            runtime.submit(tid, req)
+        runtime.step()
+        if runtime.step_count > 10_000:
+            raise RuntimeError("fig19 run did not drain")
+
+
+def _run_arm(params, cfg, heterogeneous: bool, migrate: bool):
+    runtime = ServingRuntime(params, cfg,
+                             _spec(heterogeneous, migrate), rt=RT)
+    schedule = _schedule(cfg)
+    requests = {}                     # tenant -> [Request] (arrival order)
+    for subs in schedule.values():
+        for tid, req in subs:
+            requests.setdefault(tid, []).append(req)
+    for tid, part in PINS.items():
+        runtime.add_tenant(tid, partition=part)
+    _drive(runtime, schedule)
+    return runtime, requests
+
+
+def _solo_outputs(params, cfg, requests, policy_spec):
+    """Each tenant's requests served alone on a fresh session with the
+    given policy — the token-equality oracle."""
+    sess = ServeSession(params, cfg, batch_slots=SLOTS, max_len=MAX_LEN,
+                        rt=RT, policy=ex.parse_policy(policy_spec))
+    outs = []
+    for req in requests:
+        solo = Request(uid=req.uid, prompt=req.prompt.copy(),
+                       max_new=req.max_new)
+        sess.submit(solo)
+        outs.append(solo)
+    sess.run()
+    return [r.out for r in outs]
+
+
+def run():
+    cfg = get_reduced("llama3-8b")
+    params = init_params(jax.random.PRNGKey(0), cfg)
+
+    static_rt, _ = _run_arm(params, cfg, heterogeneous=False, migrate=False)
+    live_rt, reqs = _run_arm(params, cfg, heterogeneous=True, migrate=True)
+    static, live = static_rt.report(), live_rt.report()
+
+    # token-for-token equality vs solo runs: bf16 tenants against a bf16
+    # session, the throughput tenant against an fp8/sparse24 session —
+    # the migrated tenant's stream crossed partitions mid-request
+    equal = {}
+    for tid in (HOG, "victim", "lat"):
+        solo = _solo_outputs(params, cfg, reqs[tid], BF16)
+        equal[tid] = all(r.out == s for r, s in zip(reqs[tid], solo))
+    solo = _solo_outputs(params, cfg, reqs["thr"], FP8SP)
+    equal["thr"] = all(r.out == s for r, s in zip(reqs["thr"], solo))
+
+    merged = live_rt.merged_tracer()
+    decode_pols = {(e.partition, e.policy)
+                   for e in merged.events("decode") if e.policy}
+
+    def derived(rep, rt_):
+        vic = [t.mean_turnaround_steps for t in rep.tenants
+               if t.tenant_id != HOG and t.completed]
+        return {
+            "fairness": round(rep.fairness, 4),
+            "fairness_victims": round(fairness(vic), 4),
+            "tokens": rep.tokens_out,
+            "steps": rep.steps,
+            "tok_per_step": round(rep.tokens_out / max(1, rep.steps), 3),
+            "tok_per_s": round(rep.tokens_out / max(rep.wall_s, 1e-9), 1),
+            "migrations": rep.migrations,
+            "handoffs": sum(m.slots_handed_off for m in rt_.migrations),
+            "policies": "|".join(p or "ambient" for p in rep.policies),
+        }
+
+    out = [
+        Record(name="fig19/migration/static", us_per_call=static.wall_s
+               * 1e6, derived=derived(static, static_rt)),
+        Record(name="fig19/migration/runtime", us_per_call=live.wall_s
+               * 1e6, derived=derived(live, live_rt)),
+        Record(name="fig19/migration/equality", us_per_call=0.0,
+               derived={**{f"{t}_equal": int(v) for t, v in equal.items()},
+                        "all_equal": int(all(equal.values())),
+                        "hetero_policies":
+                            int(any("fp8" in p for _, p in decode_pols)
+                                and any("bf16" in p
+                                        for _, p in decode_pols))}),
+    ]
+    return out

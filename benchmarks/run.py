@@ -36,6 +36,7 @@ MODULES = [
     "fig16_mixed_precision",
     "fig17_serving_fairness",
     "fig18_partitioned_serving",
+    "fig19_migration",
     "roofline_report",
 ]
 

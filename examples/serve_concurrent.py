@@ -2,10 +2,14 @@
 batching), comparing dense vs 2:4-sparse weights, then run the same
 workload as FOUR TENANTS through the fairness-aware StreamScheduler and
 compare admission policies — the paper's fairness-collapse result (Fig 5)
-reproduced at the serving layer, plus the §9.2 fix. Finally the same four
-tenants run through the PARTITIONED serving runtime (2 spatial
-partitions, load-aware placement, telemetry-driven adaptive quotas) — the
-§9.2 "prefer sub-mesh isolation" guidance as a working server.
+reproduced at the serving layer, plus the §9.2 fix. Then the same four
+tenants run through the serving CONTROL PLANE (runtime/server.py): one
+ServingRuntime built from a declarative ServingSpec — 2 spatial
+partitions, load-aware placement, telemetry-driven adaptive quotas — the
+§9.2 "prefer sub-mesh isolation" guidance as a working server. Finally a
+LIVE MIGRATION demo: heterogeneous per-partition policies (bf16 next to
+fp8/sparse24) with a flooding tenant re-routed mid-request, its KV/SSM
+cache state handed off between partitions.
 
   PYTHONPATH=src python examples/serve_concurrent.py
 """
@@ -19,9 +23,10 @@ from repro.configs import get_reduced
 from repro.core.concurrency import OccupancyAdvisor, WorkloadProfile
 from repro.models import init_params
 from repro.models.layers import RuntimeCfg
-from repro.runtime.partition import run_partitioned
 from repro.runtime.scheduler import run_tenants
 from repro.runtime.serve_loop import Request, ServeSession
+from repro.runtime.server import (
+    MigrationSpec, PartitionSpec, ServingRuntime, ServingSpec, run_serving)
 
 RT = RuntimeCfg(ssm_chunk=16)
 
@@ -62,10 +67,13 @@ def multi_tenant(cfg, params, n_tenants=4, reqs_per_tenant=2, slots=2):
         print(rep.summary())
 
 
-def partitioned(cfg, params, n_tenants=4, reqs_per_tenant=2, slots=2):
+def control_plane(cfg, params, n_tenants=4, reqs_per_tenant=2, slots=2):
     """The same four tenants on 1 shared-FIFO partition vs 2 partitions
-    with load-aware placement + adaptive quotas: single-queue fairness
-    collapse vs partition-local isolation, fused into one report."""
+    with load-aware placement + adaptive quotas — now expressed as two
+    declarative ServingSpecs driving one ServingRuntime each: single-
+    queue fairness collapse vs partition-local isolation, fused into one
+    report. (The old PartitionedServer facade still works as a deprecated
+    shim; see docs/serving_api.md for the migration guide.)"""
     rng = np.random.default_rng(0)
     prompts = [rng.integers(0, cfg.vocab_size, 4).astype(np.int32)
                for _ in range(reqs_per_tenant)]
@@ -76,14 +84,53 @@ def partitioned(cfg, params, n_tenants=4, reqs_per_tenant=2, slots=2):
                                for j, p in enumerate(prompts)]
                 for i in range(n_tenants)}
 
-    for n_parts, placement, admission, quota in (
-            (1, "packed", "fifo", "static"),
-            (2, "load_aware", "fair_quantum", "adaptive")):
-        rep = run_partitioned(params, cfg, workloads(),
-                              n_partitions=n_parts, placement=placement,
-                              admission=admission, quota=quota,
-                              batch_slots=slots, max_len=96, rt=RT)
+    for spec in (
+            ServingSpec(partitions=(PartitionSpec(admission="fifo"),),
+                        placement="packed", batch_slots=slots, max_len=96),
+            ServingSpec(partitions=tuple(
+                PartitionSpec(admission="fair_quantum", quota="adaptive")
+                for _ in range(2)),
+                placement="load_aware", batch_slots=slots, max_len=96)):
+        rep = run_serving(params, cfg, spec, workloads(), rt=RT)
         print(rep.summary())
+
+
+def migration(cfg, params, slots=2):
+    """Live tenant migration under heterogeneous policies: a flooding
+    tenant shares a bf16 partition with a latency tenant while a spare
+    bf16 partition idles and an fp8/sparse24 partition serves throughput
+    traffic. The load_aware re-route path detects the skew and moves the
+    flooder — including the in-flight request's KV/SSM cache state —
+    onto the spare partition."""
+    spec = ServingSpec(
+        partitions=(PartitionSpec(policy="bf16:dense:jnp"),
+                    PartitionSpec(policy="fp8:sparse24:jnp"),
+                    PartitionSpec(policy="bf16:dense:jnp")),
+        placement="load_aware", batch_slots=slots, max_len=96,
+        migration=MigrationSpec(enabled=True, interval=4, threshold=2.0,
+                                cooldown=8))
+    runtime = ServingRuntime(params, cfg, spec, rt=RT)
+    rng = np.random.default_rng(0)
+
+    def req(uid, max_new):
+        return Request(uid=uid, prompt=rng.integers(
+            0, cfg.vocab_size, 4).astype(np.int32), max_new=max_new)
+
+    runtime.add_tenant("flood", partition=0)
+    runtime.add_tenant("latency", partition=0)
+    runtime.add_tenant("throughput", partition=1)
+    for i in range(6):
+        runtime.submit("flood", req(i, 12))
+    runtime.submit("latency", req(100, 6))
+    runtime.submit("throughput", req(200, 8))
+    runtime.drain()
+    rep = runtime.report()
+    print(rep.summary())
+    for m in runtime.migrations:
+        print(f"  [migrate] {m.tenant}: p{m.src}->p{m.dst} at step "
+              f"{m.start_step} ({m.queued_moved} queued, "
+              f"{m.slots_handed_off} live handoffs), done at step "
+              f"{m.done_step}")
 
 
 def main():
@@ -106,8 +153,11 @@ def main():
     print("\n-- multi-tenant admission policies (4 tenants, 2 slots) --")
     multi_tenant(base, params)
 
-    print("\n-- partitioned serving (1x fifo vs 2x load_aware+adaptive) --")
-    partitioned(base, params)
+    print("\n-- serving control plane (1x fifo vs 2x load_aware+adaptive) --")
+    control_plane(base, params)
+
+    print("\n-- live migration + heterogeneous per-partition policies --")
+    migration(base, params)
 
 
 if __name__ == "__main__":

@@ -26,6 +26,8 @@ sensitivity) and the policy layer picks the execution mode.
 """
 from __future__ import annotations
 
+import contextlib
+import contextvars
 import dataclasses
 import math
 from typing import Any, Dict, NamedTuple, Optional, Sequence, Tuple
@@ -136,6 +138,18 @@ class ExecutionPolicy:
         """Compact string form, parseable by :func:`parse_policy`."""
         return f"{self.precision}:{self.sparsity}:{self.backend}"
 
+    def full_spec(self) -> str:
+        """Round-trippable string form: :meth:`spec` plus block shapes and
+        stream budget when set (the :class:`~repro.runtime.server.
+        ServingSpec` serialization of a policy)."""
+        parts = [self.spec()]
+        if all(b is not None
+               for b in (self.block_m, self.block_n, self.block_k)):
+            parts.append(f"{self.block_m}x{self.block_n}x{self.block_k}")
+        if self.streams != 1:
+            parts.append(f"streams={self.streams}")
+        return ":".join(parts)
+
     def describe(self) -> str:
         base = self.spec() + (f" streams={self.streams}")
         if self.rationale:
@@ -176,6 +190,34 @@ def parse_policy(spec: str, base: Optional[ExecutionPolicy] = None
 _default_policy: Optional[ExecutionPolicy] = None
 _default_backend: str = "jnp"
 
+# Partition-local policy scope. A multi-partition serving runtime runs
+# *heterogeneous* policies side by side (a throughput partition on
+# fp8/sparse24 while a latency partition stays bf16), so "the" default
+# policy is context-dependent: while a partition's session executes, any
+# consumer that would fall back to the ambient module default must see the
+# partition-local policy instead. Context-var based so concurrently
+# stepping partitions (threads) cannot leak scopes into each other.
+_scope_policy: "contextvars.ContextVar[Optional[ExecutionPolicy]]" = \
+    contextvars.ContextVar("repro_policy_scope", default=None)
+
+
+@contextlib.contextmanager
+def policy_scope(policy: Optional[ExecutionPolicy]):
+    """Make ``policy`` the contextual default for the enclosed block.
+
+    Precedence while active: explicit ``rt.policy`` > this scope > the
+    module default (``set_default_policy``) > legacy derived switches.
+    ``None`` is a no-op scope (inherit whatever is ambient)."""
+    tok = _scope_policy.set(policy)
+    try:
+        yield policy
+    finally:
+        _scope_policy.reset(tok)
+
+
+def get_scope_policy() -> Optional[ExecutionPolicy]:
+    return _scope_policy.get()
+
 
 def set_default_policy(policy: Optional[ExecutionPolicy]) -> None:
     global _default_policy
@@ -183,6 +225,9 @@ def set_default_policy(policy: Optional[ExecutionPolicy]) -> None:
 
 
 def get_default_policy() -> ExecutionPolicy:
+    scoped = _scope_policy.get()
+    if scoped is not None:
+        return scoped
     return _default_policy if _default_policy is not None \
         else ExecutionPolicy(backend=_default_backend)
 
@@ -200,13 +245,17 @@ def default_backend() -> str:
 def policy_from(cfg, rt) -> ExecutionPolicy:
     """Effective policy for a model call site.
 
-    Precedence: explicit ``rt.policy`` > module default policy > derived
-    from the legacy per-object switches (``cfg.precision``,
-    ``cfg.sparsity_24``, ``rt.use_pallas``) + module default backend.
+    Precedence: explicit ``rt.policy`` > the partition-local
+    :func:`policy_scope` > module default policy > derived from the legacy
+    per-object switches (``cfg.precision``, ``cfg.sparsity_24``,
+    ``rt.use_pallas``) + module default backend.
     """
     pol = getattr(rt, "policy", None)
     if pol is not None:
         return pol
+    scoped = _scope_policy.get()
+    if scoped is not None:
+        return scoped
     if _default_policy is not None:
         return _default_policy
     return ExecutionPolicy(

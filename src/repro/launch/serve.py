@@ -2,9 +2,15 @@
 
 CPU-runnable with ``--reduced``; demonstrates the paper-§9.2 serving levers:
 FP8 weights, 2:4-packed weights (bandwidth win in the memory-bound decode
-regime), batch-slot occupancy — and, with ``--tenants N``, the fairness-
-aware multi-tenant scheduler (runtime/scheduler.py) with its per-tenant
-fairness/CV/p50/p99 report.
+regime), batch-slot occupancy — and the serving control plane
+(runtime/server.py): multi-tenant admission, spatial partitions with
+per-partition execution policies, and live tenant migration.
+
+The canonical way to configure the control plane is a serialized
+``ServingSpec`` (``--spec spec.json``). The legacy flag cluster
+(``--partitions/--placement/--adaptive-quota/--admission/…``) is kept as
+shorthand that *builds* a spec — ``--save-spec out.json`` writes the
+effective spec so a flag invocation can be promoted to a declarative one.
 
   PYTHONPATH=src python -m repro.launch.serve --arch llama3-8b --reduced \
       --requests 8 --max-new 16 --precision fp8
@@ -12,7 +18,9 @@ fairness/CV/p50/p99 report.
       --requests 8 --tenants 4 --admission fair_quantum
   PYTHONPATH=src python -m repro.launch.serve --arch llama3-8b --reduced \
       --requests 8 --tenants 4 --partitions 2 --placement load_aware \
-      --adaptive-quota
+      --adaptive-quota --migrate
+  PYTHONPATH=src python -m repro.launch.serve --arch llama3-8b --reduced \
+      --requests 8 --tenants 4 --spec myspec.json
 """
 from __future__ import annotations
 
@@ -22,6 +30,25 @@ import time
 
 import jax
 import numpy as np
+
+
+def build_spec(args, policy):
+    """The legacy flag cluster as a :class:`ServingSpec` (the shorthand
+    path; ``--spec`` supersedes it)."""
+    from repro.runtime.server import (
+        MigrationSpec, PartitionSpec, ServingSpec)
+    quota = "adaptive" if args.adaptive_quota else None
+    return ServingSpec(
+        partitions=tuple(
+            PartitionSpec(admission=args.admission, quota=quota)
+            for _ in range(max(1, args.partitions))),
+        placement=args.placement,
+        batch_slots=args.slots,
+        max_len=args.max_len,
+        temperature=args.temperature,
+        seed=args.seed,
+        policy=policy,
+        migration=MigrationSpec(enabled=args.migrate))
 
 
 def main():
@@ -45,24 +72,30 @@ def main():
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--tenants", type=int, default=1,
                     help="number of tenant queues; >1 routes through the "
-                         "fairness-aware StreamScheduler "
-                         "(runtime/scheduler.py)")
+                         "serving control plane / StreamScheduler")
+    ap.add_argument("--spec", default=None, metavar="PATH",
+                    help="serialized ServingSpec (runtime/server.py); "
+                         "supersedes the partition/placement/admission/"
+                         "quota shorthand flags")
+    ap.add_argument("--save-spec", default=None, metavar="PATH",
+                    help="write the effective ServingSpec as JSON (promote "
+                         "a flag invocation to a declarative spec)")
     ap.add_argument("--admission", default="fair_quantum",
                     choices=["fifo", "round_robin", "fair_quantum"],
-                    help="multi-tenant admission policy (with --tenants)")
+                    help="[shorthand] multi-tenant admission policy")
     ap.add_argument("--partitions", type=int, default=1,
-                    help="spatial sub-mesh partitions; >1 serves tenants "
-                         "through the PartitionedServer "
-                         "(runtime/partition.py): one session+scheduler "
-                         "per partition, fused report")
+                    help="[shorthand] spatial sub-mesh partitions; >1 "
+                         "serves tenants through the ServingRuntime "
+                         "control plane (runtime/server.py)")
     ap.add_argument("--placement", default="spread",
                     choices=["packed", "spread", "load_aware"],
-                    help="tenant->partition routing policy "
-                         "(with --partitions)")
+                    help="[shorthand] tenant->partition routing policy")
     ap.add_argument("--adaptive-quota", action="store_true",
-                    help="re-derive per-tenant fair_quantum slot caps "
-                         "online from Tracer.tenant_percentiles() instead "
-                         "of static stream budgets")
+                    help="[shorthand] re-derive per-tenant fair_quantum "
+                         "slot caps online from Tracer.tenant_percentiles()")
+    ap.add_argument("--migrate", action="store_true",
+                    help="[shorthand] enable live tenant migration (the "
+                         "load_aware re-route path; see MigrationSpec)")
     ap.add_argument("--telemetry", action="store_true",
                     help="record per-op/per-tenant events to a Tracer and "
                          "print the observatory summary at exit")
@@ -79,6 +112,7 @@ def main():
     from repro.runtime import telemetry
     from repro.runtime.serve_loop import Request, ServeSession
     from repro.runtime.scheduler import StreamScheduler
+    from repro.runtime.server import ServingRuntime, ServingSpec
 
     if args.autotune:
         store = autotune.install()
@@ -103,6 +137,16 @@ def main():
         if args.backend:
             policy = dataclasses.replace(policy, backend=args.backend)
 
+    if args.spec:
+        spec = ServingSpec.load(args.spec)
+        print(f"[serve] spec loaded: {args.spec} "
+              f"({spec.n_partitions} partitions, {spec.placement}, "
+              f"migration={'on' if spec.migration.enabled else 'off'})")
+    else:
+        spec = build_spec(args, policy)
+    if args.save_spec:
+        print(f"[serve] spec written: {spec.save(args.save_spec)}")
+
     rt = RuntimeCfg(ssm_chunk=32)
     params = init_params(jax.random.PRNGKey(args.seed), cfg)
 
@@ -114,34 +158,32 @@ def main():
         requests.append(Request(uid=uid, prompt=prompt,
                                 max_new=args.max_new))
 
-    quota = "adaptive" if args.adaptive_quota else None
-    if args.partitions > 1:
-        # partitioned serving runtime: one session+scheduler per spatial
-        # partition, tenants routed by --placement, fused report
-        from repro.runtime.partition import PartitionedServer
-        server = PartitionedServer(
-            params, cfg, n_partitions=args.partitions,
-            batch_slots=args.slots, max_len=args.max_len, rt=rt,
-            placement=args.placement, admission=args.admission,
-            quota=quota, temperature=args.temperature, seed=args.seed,
-            policy=policy,
+    use_runtime = (args.spec is not None or spec.n_partitions > 1
+                   or spec.migration.enabled)
+    if use_runtime:
+        # the serving control plane: one runtime from one spec — per-
+        # partition policies, routed tenants, optional live migration
+        runtime = ServingRuntime(
+            params, cfg, spec, rt=rt,
             session_kw={"auto_backend": args.backend,
                         "verbose_policy": True})
         # timed region starts AFTER construction: session setup (policy
         # resolution, sparse24 pre-pack, cache alloc) must not pollute
         # the reported serving tok/s
         t0 = time.time()
-        n_tenants = max(args.tenants, 1)
-        for i in range(n_tenants):
-            part = server.add_tenant(f"tenant{i}")
-            print(f"[serve] tenant{i} -> partition {part} "
-                  f"({args.placement})")
+        tenant_ids = [t.id for t in spec.tenants]
+        if not tenant_ids:
+            tenant_ids = [f"tenant{i}" for i in range(max(args.tenants, 1))]
+            for tid in tenant_ids:
+                part = runtime.add_tenant(tid)
+                print(f"[serve] {tid} -> partition {part} "
+                      f"({spec.placement})")
         for uid, req in enumerate(requests):
-            server.submit(f"tenant{uid % n_tenants}", req)
-        done = server.run()
-        print(server.report().summary())
+            runtime.submit(tenant_ids[uid % len(tenant_ids)], req)
+        done = runtime.drain()
+        print(runtime.report().summary())
         if tracer is not None:
-            print(server.merged_tracer().summary())
+            print(runtime.merged_tracer().summary())
             # the ambient tracer holds the trace-time per-op events
             # (matmul/resolve) the per-partition tracers don't see
             print(tracer.summary())
@@ -166,6 +208,7 @@ def main():
         # or an explicit streams= token) — a policy built just to pick a
         # backend carries the default streams=1 and would silently cap
         # every tenant to one slot.
+        quota = "adaptive" if args.adaptive_quota else None
         sched = StreamScheduler(sess, admission=args.admission,
                                 tracer=tracer, quota=quota)
         tpol = None

@@ -1,163 +1,54 @@
-"""Partitioned serving runtime: spatial sub-mesh partitions + tenant router.
+"""DEPRECATED facade — the partitioned serving entry point of PR 4.
 
-The paper's §6/§9.2 guidance — and AMD's Instinct partitioning modes
-(CPX/NPS, see the partitioning-guide study in PAPERS.md) — is that a
-large accelerator node should *place* latency-sensitive streams onto
-disjoint sub-device partitions instead of funneling everything through
-one shared queue: partition-local execution is the difference between
-predictable and collapsed tail latency. This module is that placement
-layer for the serving stack:
+The control plane moved to :mod:`repro.runtime.server`: construct a
+:class:`~repro.runtime.server.ServingRuntime` from a declarative
+:class:`~repro.runtime.server.ServingSpec` instead (per-partition
+execution policies, admission/quota, placement, live tenant migration —
+see docs/serving_api.md for the migration guide). This module keeps the
+old names importable for one release:
 
-* :class:`DevicePartition` — one disjoint device subset, derived from
-  ``jax.devices()``. On a single-device container (CPU CI) the partitions
-  are *logical*: they share the physical device but keep fully separate
-  sessions/schedulers/tracers, so every behavioral property (routing,
-  quotas, fused telemetry) runs under tier-1 tests.
-* :class:`PartitionedServer` — owns one
-  :class:`~repro.runtime.serve_loop.ServeSession` +
-  :class:`~repro.runtime.scheduler.StreamScheduler` + partition-tagged
-  :class:`~repro.runtime.telemetry.Tracer` per partition, routes tenants
-  to partitions via a pluggable placement policy, and exposes the same
-  ``submit / step / run / report`` facade as a single scheduler — existing
-  callers move over by constructing this instead.
+* :class:`DevicePartition` / :func:`make_partitions` /
+  :class:`PartitionedReport` — re-exported from ``runtime.server``
+  (unchanged semantics).
+* :class:`PartitionedServer` — a thin shim over ``ServingRuntime`` with
+  the legacy constructor signature and the ``run()`` verb (now
+  ``drain()``). Emits a :class:`DeprecationWarning`.
+* :func:`run_partitioned` — delegates to
+  :func:`~repro.runtime.server.run_serving`.
 
-Placement policies (tenant → partition, pinned at registration):
-
-* ``packed``     — fill partition 0 up to its slot budget, then 1, …
-  (maximizes batch occupancy per partition; the throughput extreme).
-* ``spread``     — least-loaded by registered tenant weight, ties by
-  partition index (maximizes isolation; the latency extreme).
-* ``load_aware`` — least *measured* load: registered weight plus each
-  partition tracer's decode-wall EMA signal, so placement follows
-  observed congestion rather than static counts. With no traffic yet it
-  degrades to ``spread`` — placement stays deterministic for a fixed
-  registration sequence.
+Behavioral note: the runtime steps partitions in LOCKSTEP (every
+partition ticks every round — the documented model the old facade only
+approximated), which keeps request step accounting in one global domain
+so fairness/turnaround stay exact across live migrations.
 """
 from __future__ import annotations
 
-import dataclasses
-from typing import Dict, List, Optional, Sequence, Union
+import warnings
+from typing import Dict, Optional, Sequence, Union
 
-from repro.core import concurrency as cc
-from repro.core import execution as ex
-from repro.runtime import telemetry
-from repro.runtime.scheduler import (
-    QuotaPolicy, SchedulerReport, StreamScheduler)
-from repro.runtime.serve_loop import Request, ServeSession
-
-PLACEMENTS = ("packed", "spread", "load_aware")
+from repro.runtime.server import (           # noqa: F401 — re-exports
+    PLACEMENTS, DevicePartition, MigrationRecord, PartitionedReport,
+    PartitionSpec, ServingRuntime, ServingSpec, make_partitions,
+    run_serving)
+from repro.runtime.scheduler import QuotaPolicy
+from repro.runtime.serve_loop import Request
 
 
-# ---------------------------------------------------------------------------
-# Device partitions
-# ---------------------------------------------------------------------------
+def _warn(old: str) -> None:
+    warnings.warn(
+        f"{old} is deprecated: build a ServingRuntime from a ServingSpec "
+        "(repro.runtime.server); see docs/serving_api.md for the "
+        "migration guide",
+        DeprecationWarning, stacklevel=3)
 
-@dataclasses.dataclass(frozen=True)
-class DevicePartition:
-    """One spatial partition: a disjoint device subset (possibly shared
-    with other partitions only in the single-device logical fallback)."""
-    index: int
-    devices: tuple = ()
-    logical: bool = False            # True: single-device fallback
-
-    @property
-    def label(self) -> str:
-        kind = "logical" if self.logical else "devices"
-        return f"partition{self.index}({kind}:{len(self.devices)})"
-
-
-def make_partitions(n: int, devices: Optional[Sequence] = None
-                    ) -> List[DevicePartition]:
-    """Split the attached devices into ``n`` disjoint partitions.
-
-    With at least ``n`` devices each partition gets ``len(devices)//n`` of
-    them (remainder devices go to the leading partitions, mirroring
-    ``run_spatial``'s subset semantics). With fewer — the CPU CI case —
-    every partition is *logical*: it references the same device set but
-    the serving state (session, scheduler, tracer) is fully per-partition,
-    which is what the behavioral contracts test."""
-    if n <= 0:
-        raise ValueError("need at least one partition")
-    if devices is None:
-        import jax
-        try:
-            devices = tuple(jax.devices())
-        except Exception:  # noqa: BLE001 — no backend: logical partitions
-            devices = ()
-    devices = tuple(devices)
-    if len(devices) < n:
-        return [DevicePartition(index=i, devices=devices, logical=True)
-                for i in range(n)]
-    per, extra = divmod(len(devices), n)
-    parts, at = [], 0
-    for i in range(n):
-        take = per + (1 if i < extra else 0)
-        parts.append(DevicePartition(index=i,
-                                     devices=devices[at:at + take]))
-        at += take
-    return parts
-
-
-# ---------------------------------------------------------------------------
-# Fused report
-# ---------------------------------------------------------------------------
-
-@dataclasses.dataclass
-class PartitionedReport:
-    """One fused view over all partitions.
-
-    ``fairness``/``cv`` are the paper indices over *every* tenant's mean
-    turnaround (step domain), regardless of which partition served it —
-    cross-partition fairness is exactly what partitioning is supposed to
-    buy. ``steps`` is the max over partitions (they step in lockstep from
-    ``run``), ``tokens_out`` the sum."""
-    placement: str
-    admission: str
-    quota: str
-    n_partitions: int
-    n_tenants: int
-    steps: int
-    wall_s: float
-    tokens_out: int
-    fairness: float
-    cv: float
-    tenant_partition: Dict[str, int]
-    partitions: List[SchedulerReport]
-
-    def to_dict(self) -> Dict:
-        return dataclasses.asdict(self)
-
-    def summary(self) -> str:
-        lines = [
-            f"[partitioned] {self.n_partitions} partitions "
-            f"({self.placement}), {self.admission}/{self.quota}: "
-            f"{self.n_tenants} tenants, {self.steps} steps, "
-            f"{self.tokens_out} tokens in {self.wall_s:.2f}s | "
-            f"fairness={self.fairness:.3f} cv={self.cv:.3f}"]
-        for rep in self.partitions:
-            for line in rep.summary().splitlines():
-                lines.append("  " + line)
-        return "\n".join(lines)
-
-
-# ---------------------------------------------------------------------------
-# The partitioned server
-# ---------------------------------------------------------------------------
 
 class PartitionedServer:
-    """Many schedulers on one node, one facade.
+    """Deprecated shim: the PR 4 facade over the new control plane.
 
-    One :class:`ServeSession` + :class:`StreamScheduler` + partition-tagged
-    :class:`Tracer` per :class:`DevicePartition`; tenants are routed to a
-    partition at :meth:`add_tenant` time by the placement policy and stay
-    pinned (their requests follow them). ``submit``/``step``/``run``/
-    ``report`` mirror the single-scheduler API, so callers that drove a
-    ``StreamScheduler`` directly keep working against this facade.
-
-    Every partition's session is built from the same params/config/seed,
-    so a tenant's token stream is independent of *which* partition serves
-    it and of who shares the node — the multi-partition run equals the
-    per-partition solo runs token-for-token (tested)."""
+    All attributes (``schedulers``/``sessions``/``tracers``/
+    ``tenant_partition``/``report``/``merged_tracer``/…) delegate to the
+    wrapped :class:`~repro.runtime.server.ServingRuntime`; ``run`` maps to
+    ``drain``."""
 
     def __init__(self, params, cfg, *, n_partitions: int = 1,
                  batch_slots: int = 4, max_len: int = 128, rt=None,
@@ -167,180 +58,27 @@ class PartitionedServer:
                  temperature: float = 0.0, seed: int = 0, policy=None,
                  partitions: Optional[Sequence[DevicePartition]] = None,
                  tracer_capacity: int = 4096, session_kw=None):
-        if placement not in PLACEMENTS:
-            raise ValueError(f"placement {placement!r} not in {PLACEMENTS}")
-        self.placement = placement
-        self.admission = admission
-        self.partitions = list(partitions) if partitions is not None \
-            else make_partitions(n_partitions)
-        self.batch_slots = batch_slots
-        if isinstance(quota, (list, tuple)):
-            if len(quota) != len(self.partitions):
-                raise ValueError(
-                    f"quota sequence has {len(quota)} entries for "
-                    f"{len(self.partitions)} partitions")
-            # string/None specs are instantiated fresh per partition and
-            # may repeat; only *instances* carry per-scheduler state
-            insts = [q for q in quota if isinstance(q, QuotaPolicy)]
-            if len(set(map(id, insts))) != len(insts):
-                raise ValueError(
-                    "the quota sequence repeats a QuotaPolicy instance "
-                    "across partitions; online policies keep "
-                    "per-scheduler state — pass one instance per "
-                    "partition")
-        if isinstance(policy, ex.ExecutionPolicy) \
-                and policy.sparsity == "sparse24":
-            # prune+pack the shared weights ONCE here; each session's own
-            # pack pass then finds only PackedWeight leaves (no-op walk)
-            # instead of re-packing the full model per partition
-            params = ex.pack_model_params(params)
-        self.tracers: List[telemetry.Tracer] = []
-        self.sessions: List[ServeSession] = []
-        self.schedulers: List[StreamScheduler] = []
-        self.tenant_partition: Dict[str, int] = {}
-        kw = dict(session_kw or {})
-        if rt is not None:
-            kw["rt"] = rt
-        for part in self.partitions:
-            tr = telemetry.Tracer(capacity=tracer_capacity,
-                                  partition=part.index)
-            sess = ServeSession(self._place_params(params, part), cfg,
-                                batch_slots=batch_slots, max_len=max_len,
-                                temperature=temperature, seed=seed,
-                                policy=policy, telemetry=tr, **kw)
-            sched = StreamScheduler(sess, admission=admission, tracer=tr,
-                                    quota=self._quota_for(quota, part.index))
-            self.tracers.append(tr)
-            self.sessions.append(sess)
-            self.schedulers.append(sched)
-
-    @staticmethod
-    def _place_params(params, part: DevicePartition):
-        """Pin the model replica to the partition's lead device. Logical
-        partitions (single-device fallback) share the original params —
-        duplicating them would only waste the one device's memory."""
-        if part.logical or not part.devices:
-            return params
-        import jax
-        return jax.device_put(params, part.devices[0])
-
-    @staticmethod
-    def _quota_for(quota, index: int):
-        """Quota spec per partition: a sequence is indexed, a string/None
-        is instantiated *fresh* per partition (online policies keep
-        per-partition state and must not be shared)."""
-        if isinstance(quota, (list, tuple)):
-            return quota[index]
-        if isinstance(quota, QuotaPolicy):
-            if index > 0:
-                raise ValueError(
-                    "a single QuotaPolicy instance cannot be shared across "
-                    "partitions (it keeps per-scheduler state); pass a "
-                    "string spec or one instance per partition")
-            return quota
-        return quota
-
-    # -- routing ------------------------------------------------------------
-    @property
-    def n_partitions(self) -> int:
-        return len(self.partitions)
-
-    def _load(self, i: int) -> float:
-        """Observed load of partition ``i``: registered tenant weight plus
-        the tracer's measured decode signal (mean decode wall × outstanding
-        work). Zero-traffic partitions score by weight alone."""
-        sched = self.schedulers[i]
-        weight = sum(t.weight for t in sched.tenants.values())
-        backlog = sched.pending() + sched.session.n_active
-        return weight + self.tracers[i].mean_wall("decode") * backlog
-
-    def _route(self, weight: float) -> int:
-        if self.placement == "packed":
-            # first partition whose registered tenancy has not yet filled
-            # its slot budget; once every budget is full, overflow goes to
-            # the least-populated partition (ties to the lowest index)
-            for i, sched in enumerate(self.schedulers):
-                if len(sched.tenants) < self.sessions[i].batch_slots:
-                    return i
-            return min(range(self.n_partitions),
-                       key=lambda i: (len(self.schedulers[i].tenants), i))
-        if self.placement == "spread":
-            return min(range(self.n_partitions),
-                       key=lambda i: (sum(t.weight for t in
-                                          self.schedulers[i]
-                                          .tenants.values()), i))
-        # load_aware: least measured load, ties by index
-        return min(range(self.n_partitions),
-                   key=lambda i: (self._load(i), i))
-
-    def add_tenant(self, tenant_id: str, *, weight: float = 1.0,
-                   policy=None, partition: Optional[int] = None) -> int:
-        """Register a tenant and pin it to a partition (router-chosen
-        unless ``partition`` forces one). Returns the partition index."""
-        if tenant_id in self.tenant_partition:
-            raise ValueError(f"tenant {tenant_id!r} already registered")
-        idx = self._route(weight) if partition is None else partition
-        self.schedulers[idx].add_tenant(tenant_id, weight=weight,
-                                        policy=policy)
-        self.tenant_partition[tenant_id] = idx
-        self.tracers[idx].record("route", tenant=tenant_id,
-                                 meta={"weight": weight,
-                                       "placement": self.placement})
-        return idx
-
-    # -- facade (same verbs as StreamScheduler) -----------------------------
-    def submit(self, tenant_id: str, req: Request) -> None:
-        self.schedulers[self.tenant_partition[tenant_id]].submit(
-            tenant_id, req)
-
-    def pending(self) -> int:
-        return sum(s.pending() for s in self.schedulers)
+        _warn("PartitionedServer")
+        n = n_partitions if partitions is None else len(partitions)
+        spec = ServingSpec(
+            partitions=tuple(PartitionSpec(admission=admission)
+                             for _ in range(max(1, n))),
+            placement=placement, batch_slots=batch_slots, max_len=max_len,
+            temperature=temperature, seed=seed)
+        self._runtime = ServingRuntime(
+            params, cfg, spec, rt=rt, policy=policy, quota=quota,
+            partitions=partitions, tracer_capacity=tracer_capacity,
+            session_kw=session_kw)
 
     @property
-    def n_active(self) -> int:
-        return sum(s.session.n_active for s in self.schedulers)
+    def runtime(self) -> ServingRuntime:
+        return self._runtime
 
-    def step(self) -> List[Request]:
-        """One lockstep round: every partition with work advances one
-        scheduler step. Returns all requests completed this round."""
-        done: List[Request] = []
-        for sched in self.schedulers:
-            if sched.pending() or sched.session.n_active:
-                done.extend(sched.step())
-        return done
+    def run(self, max_steps: int = 100_000):
+        return self._runtime.drain(max_steps=max_steps)
 
-    def run(self, max_steps: int = 100_000) -> List[Request]:
-        steps = 0
-        while (self.pending() or self.n_active) and steps < max_steps:
-            self.step()
-            steps += 1
-        return [r for sched in self.schedulers
-                for t in sched.tenants.values() for r in t.completed]
-
-    # -- fused telemetry ----------------------------------------------------
-    def merged_tracer(self) -> telemetry.Tracer:
-        """One fused event view over all partitions
-        (:meth:`telemetry.Tracer.merge`; partition tags preserved)."""
-        return telemetry.Tracer.merge(*self.tracers)
-
-    def report(self) -> PartitionedReport:
-        reps = [s.report() for s in self.schedulers]
-        turnarounds = [t.mean_turnaround_steps
-                       for rep in reps for t in rep.tenants
-                       if t.completed]
-        return PartitionedReport(
-            placement=self.placement,
-            admission=self.admission,
-            quota="/".join(sorted({s.quota.name for s in self.schedulers})),
-            n_partitions=self.n_partitions,
-            n_tenants=sum(rep.n_tenants for rep in reps),
-            steps=max((rep.steps for rep in reps), default=0),
-            wall_s=max((rep.wall_s for rep in reps), default=0.0),
-            tokens_out=sum(rep.tokens_out for rep in reps),
-            fairness=cc.fairness(turnarounds),
-            cv=cc.cv(turnarounds),
-            tenant_partition=dict(self.tenant_partition),
-            partitions=reps)
+    def __getattr__(self, name):
+        return getattr(self._runtime, name)
 
 
 def run_partitioned(params, cfg, workloads: Dict[str, Sequence[Request]],
@@ -349,18 +87,17 @@ def run_partitioned(params, cfg, workloads: Dict[str, Sequence[Request]],
                     admission: str = "fair_quantum",
                     quota: Union[None, str] = None,
                     weights: Optional[Dict[str, float]] = None,
-                    max_steps: int = 100_000,
-                    **server_kw) -> PartitionedReport:
-    """One-shot helper mirroring :func:`~repro.runtime.scheduler.
-    run_tenants`: build the partitioned server, register + submit every
-    tenant's workload, run to completion, return the fused report."""
-    server = PartitionedServer(params, cfg, n_partitions=n_partitions,
-                               placement=placement, admission=admission,
-                               quota=quota, **server_kw)
-    for tid in workloads:
-        server.add_tenant(tid, weight=(weights or {}).get(tid, 1.0))
-    for tid, reqs in workloads.items():
-        for req in reqs:
-            server.submit(tid, req)
-    server.run(max_steps=max_steps)
-    return server.report()
+                    max_steps: int = 100_000, batch_slots: int = 4,
+                    max_len: int = 128, rt=None, **server_kw
+                    ) -> PartitionedReport:
+    """Deprecated one-shot helper — use
+    :func:`~repro.runtime.server.run_serving` with a ServingSpec."""
+    _warn("run_partitioned")
+    spec = ServingSpec(
+        partitions=tuple(PartitionSpec(admission=admission)
+                         for _ in range(max(1, n_partitions))),
+        placement=placement, batch_slots=batch_slots, max_len=max_len,
+        seed=server_kw.pop("seed", 0),
+        temperature=server_kw.pop("temperature", 0.0))
+    return run_serving(params, cfg, spec, workloads, weights=weights,
+                       max_steps=max_steps, rt=rt, quota=quota, **server_kw)

@@ -44,8 +44,9 @@ latencies ride along for real deployments.
 from __future__ import annotations
 
 import dataclasses
+import itertools
 import time
-from typing import Any, Dict, List, Optional, Sequence, Union
+from typing import Any, Dict, List, Optional, Sequence, Tuple, Union
 
 import numpy as np
 
@@ -55,6 +56,12 @@ from repro.runtime.serve_loop import Request, ServeSession
 
 ADMISSION_POLICIES = ("fifo", "round_robin", "fair_quantum")
 QUOTA_POLICIES = ("static", "adaptive")
+
+# Arrival stamps are PROCESS-GLOBAL (not per-scheduler): a live migration
+# moves queued requests between schedulers, and fifo's min-by-arrival
+# tiebreak is only meaningful if every request's stamp comes from one
+# ordered domain. Deterministic for a fixed submission sequence.
+_ARRIVALS = itertools.count()
 
 
 def request_cost(req: Request) -> int:
@@ -76,6 +83,9 @@ class Tenant:
     active: int = 0                  # slots currently held
     service_steps: int = 0           # decode steps holding >= 1 slot
     vtime: float = 0.0               # fair_quantum: served_work / weight
+    frozen: bool = False             # draining: no new admissions
+    first_submit_step: int = -1      # earliest demand (starvation lower
+    #                                  bound when nothing ever completes)
 
     def slot_cap(self, default: int) -> int:
         """Concurrent-slot quota: the tenant policy's stream budget if it
@@ -95,9 +105,53 @@ class TenantReport:
     mean_queue_wait_steps: float     # submit -> admit, scheduler steps
     p50_latency_s: float
     p99_latency_s: float
+    submitted: int = 0               # demand (0: registered but idle)
+    partition: int = -1              # serving partition (-1: unpartitioned)
+    migrations: int = 0              # times this tenant was live-migrated
 
     def to_dict(self) -> Dict[str, Any]:
         return dataclasses.asdict(self)
+
+
+def build_tenant_report(tid: str, records: Sequence[Tenant],
+                        step_count: int, *, partition: int = -1,
+                        migrations: int = 0
+                        ) -> Tuple[TenantReport, Optional[float]]:
+    """One fused :class:`TenantReport` over a tenant's records (a tenant
+    mid-migration briefly has one per partition) plus its fairness-
+    denominator contribution: the mean completed turnaround; the elapsed
+    wait as a lower bound when STARVED (demand but nothing finished —
+    starvation must drag fairness down, not vanish from it); ``None``
+    with no demand. The single accounting rule shared by the scheduler
+    and runtime reports, so the fused view cannot drift from the
+    per-partition views it embeds."""
+    completed = [r for t in records for r in t.completed]
+    submitted = sum(t.submitted for t in records)
+    ta = [float(r.finish_step - r.submit_step) for r in completed]
+    waits = [float(r.admit_step - r.submit_step) for r in completed]
+    lat = cc.latency_percentiles([r.latency_s for r in completed])
+    mean_ta = float(np.mean(ta)) if ta else 0.0
+    row = TenantReport(
+        tenant_id=tid,
+        completed=len(completed),
+        tokens_out=sum(t.tokens_out for t in records),
+        service_steps=sum(t.service_steps for t in records),
+        mean_turnaround_steps=mean_ta,
+        mean_queue_wait_steps=float(np.mean(waits)) if waits else 0.0,
+        p50_latency_s=lat["p50"],
+        p99_latency_s=lat["p99"],
+        submitted=submitted,
+        partition=partition,
+        migrations=migrations)
+    if ta:
+        contribution: Optional[float] = mean_ta
+    elif submitted:
+        first = min((t.first_submit_step for t in records
+                     if t.first_submit_step >= 0), default=0)
+        contribution = float(step_count - first)
+    else:
+        contribution = None
+    return row, contribution
 
 
 @dataclasses.dataclass
@@ -185,26 +239,45 @@ class AdaptiveQuota(QuotaPolicy):
     freed share is granted to the best-behaved backlogged tenant. The
     aggregate grant never exceeds ``max(batch_slots, n_tenants)`` — the
     partition's budget with the per-tenant floor — so online re-derivation
-    can redistribute but never oversubscribe."""
+    can redistribute but never oversubscribe.
+
+    Second signal — occupancy (``fill_floor``): when the tracer's mean
+    observed grid-tile fill (:meth:`~repro.runtime.telemetry.Tracer.
+    mean_fill`) drops below ``fill_floor``, the *aggregate* budget shrinks
+    by one slot per interval (floor: one slot per tenant) and recovers one
+    slot per interval once fill is back above the floor — the §5/§6
+    finding that a collapsed grid cannot pay for wide concurrency, folded
+    into admission. ``None`` (default) disables the signal: absolute fill
+    is only meaningful against a calibrated core count, so deployments
+    opt in with the measured floor (``launch/profile.py`` artifacts)."""
 
     name = "adaptive"
 
     def __init__(self, interval: int = 8, outlier_factor: float = 1.5,
-                 metric: str = "turnaround_steps", min_samples: int = 2):
+                 metric: str = "turnaround_steps", min_samples: int = 2,
+                 fill_floor: Optional[float] = None, n_cores: int = 256):
         if interval <= 0:
             raise ValueError("interval must be positive")
         self.interval = interval
         self.outlier_factor = outlier_factor
         self.metric = metric
         self.min_samples = min_samples
+        self.fill_floor = fill_floor
+        self.n_cores = n_cores
         self.caps: Dict[str, int] = {}
         self.recalcs = 0
         self.shrunk: Dict[str, int] = {}   # tenant -> total cap reductions
+        self.occupancy_shrinks = 0         # budget cuts from fill collapse
+        self._fill_budget: Optional[int] = None   # None: signal never fired
         self._seeded_for: frozenset = frozenset()
 
     # -- seeding ------------------------------------------------------------
     def budget(self, sched: "StreamScheduler") -> int:
-        return max(sched.session.batch_slots, len(sched.tenants))
+        full = max(sched.session.batch_slots, len(sched.tenants))
+        if self._fill_budget is None:
+            return full
+        # occupancy-collapsed budget: never below one slot per tenant
+        return max(max(1, len(sched.tenants)), min(full, self._fill_budget))
 
     def _seed(self, sched: "StreamScheduler") -> None:
         tenants = [sched.tenants[tid] for tid in sched._order]
@@ -230,6 +303,49 @@ class AdaptiveQuota(QuotaPolicy):
             self._seed(sched)
         return self.caps[tenant.tenant_id]
 
+    # -- the occupancy signal ------------------------------------------------
+    def _occupancy_step(self, sched: "StreamScheduler", tracer) -> None:
+        """Shrink/recover the aggregate budget from the measured grid
+        fill, then trim caps to fit (largest caps first, registration
+        order breaking ties)."""
+        fill = tracer.mean_fill(self.n_cores)
+        if fill is None:
+            return
+        full = max(sched.session.batch_slots, len(sched.tenants))
+        floor = max(1, len(sched.tenants))
+        changed = False
+        if fill < self.fill_floor:
+            cur = full if self._fill_budget is None else self._fill_budget
+            nxt = max(floor, cur - 1)
+            if nxt < cur:
+                self._fill_budget = nxt
+                self.occupancy_shrinks += 1
+                changed = True
+        elif self._fill_budget is not None:
+            self._fill_budget += 1
+            changed = True
+            if self._fill_budget >= full:
+                self._fill_budget = None          # fully recovered
+        if not changed:
+            return
+        budget = self.budget(sched)
+        while sum(self.caps.values()) > budget:
+            tid = max(self.caps, key=lambda t: (self.caps[t],
+                                                -sched._order.index(t)))
+            if self.caps[tid] <= 1:
+                break
+            self.caps[tid] -= 1
+        # recovery must REGROW the trimmed caps, not just the budget —
+        # smallest caps first (the reverse of the trim), registration
+        # order breaking ties, up to the recovered budget
+        while sum(self.caps.values()) < budget:
+            tid = min(self.caps, key=lambda t: (self.caps[t],
+                                                sched._order.index(t)))
+            self.caps[tid] += 1
+        tracer.record("quota", step=sched.step_count,
+                      meta={"signal": "occupancy", "fill": fill,
+                            "budget": budget, "caps": dict(self.caps)})
+
     # -- the online loop ----------------------------------------------------
     def on_step(self, sched: "StreamScheduler") -> None:
         if sched.step_count == 0 or sched.step_count % self.interval:
@@ -239,6 +355,8 @@ class AdaptiveQuota(QuotaPolicy):
         tracer = sched.tracer
         if tracer is None:
             return
+        if self.fill_floor is not None and self.caps:
+            self._occupancy_step(sched, tracer)
         lats = tracer.tenant_latencies(self.metric)
         ratios: Dict[str, float] = {}
         for tid, ls in lats.items():
@@ -343,7 +461,6 @@ class StreamScheduler:
         self.tenants: Dict[str, Tenant] = {}
         self._order: List[str] = []      # registration order (rr pointer)
         self._rr_next = 0
-        self._arrivals = 0
         self.step_count = 0
         self.admitted_order: List[str] = []   # tenant id per admission
         self._default_cap: Optional[int] = None
@@ -361,6 +478,39 @@ class StreamScheduler:
         self.tenants[tenant_id] = t
         self._order.append(tenant_id)
         self._default_cap = None         # advisor cap depends on tenancy
+        if self.tracer is not None:
+            # a registered-but-idle tenant must still be enumerable from
+            # telemetry (it has no admit/request events of its own)
+            self.tracer.record("register", tenant=tenant_id,
+                               step=self.step_count,
+                               meta={"weight": weight})
+        return t
+
+    def freeze(self, tenant_id: str) -> None:
+        """Stop admitting ``tenant_id`` (drain mode: in-flight requests
+        keep decoding, queued/new requests wait). The serving runtime
+        freezes a tenant on its source partition while migrating it."""
+        self.tenants[tenant_id].frozen = True
+
+    def thaw(self, tenant_id: str) -> None:
+        self.tenants[tenant_id].frozen = False
+
+    def remove_tenant(self, tenant_id: str) -> Tenant:
+        """Detach a fully drained tenant (no queue, no active slots) and
+        return its record — the migration path folds it into the target
+        partition's record. Raises if the tenant still has work here."""
+        t = self.tenants[tenant_id]
+        if t.queue or t.active:
+            raise ValueError(
+                f"tenant {tenant_id!r} still has {len(t.queue)} queued / "
+                f"{t.active} active requests on this scheduler")
+        del self.tenants[tenant_id]
+        self._order.remove(tenant_id)
+        self._default_cap = None
+        if self._order:
+            self._rr_next %= len(self._order)
+        else:
+            self._rr_next = 0
         return t
 
     def submit(self, tenant_id: str, req: Request):
@@ -368,9 +518,10 @@ class StreamScheduler:
         req.tenant = tenant_id
         req.submit_t = time.perf_counter()
         req.submit_step = self.step_count
-        req._arrival = self._arrivals    # deterministic fifo tiebreak
-        self._arrivals += 1
+        req._arrival = next(_ARRIVALS)   # global deterministic fifo tiebreak
         t.submitted += 1
+        if t.first_submit_step < 0:
+            t.first_submit_step = self.step_count
         t.queue.append(req)
 
     def pending(self) -> int:
@@ -396,6 +547,7 @@ class StreamScheduler:
     def _admissible(self) -> List[Tenant]:
         return [self.tenants[tid] for tid in self._order
                 if self.tenants[tid].queue
+                and not self.tenants[tid].frozen
                 and self.tenants[tid].active
                 < self._slot_cap(self.tenants[tid])]
 
@@ -481,22 +633,11 @@ class StreamScheduler:
         per_tenant: List[TenantReport] = []
         turnarounds: List[float] = []
         for tid in self._order:
-            t = self.tenants[tid]
-            ta = [float(r.finish_step - r.submit_step) for r in t.completed]
-            waits = [float(r.admit_step - r.submit_step) for r in t.completed]
-            lat = cc.latency_percentiles([r.latency_s for r in t.completed])
-            mean_ta = float(np.mean(ta)) if ta else 0.0
-            per_tenant.append(TenantReport(
-                tenant_id=tid,
-                completed=len(t.completed),
-                tokens_out=t.tokens_out,
-                service_steps=t.service_steps,
-                mean_turnaround_steps=mean_ta,
-                mean_queue_wait_steps=float(np.mean(waits)) if waits else 0.0,
-                p50_latency_s=lat["p50"],
-                p99_latency_s=lat["p99"]))
-            if ta:
-                turnarounds.append(mean_ta)
+            row, contrib = build_tenant_report(
+                tid, [self.tenants[tid]], self.step_count)
+            per_tenant.append(row)
+            if contrib is not None:
+                turnarounds.append(contrib)
         busy = sum(t.service_steps for t in self.tenants.values())
         return SchedulerReport(
             admission=self.admission,

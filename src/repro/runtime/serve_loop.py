@@ -13,6 +13,7 @@ builds on (``admit`` / ``decode_once`` / ``free_slot``).
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import functools
 import time
@@ -88,6 +89,24 @@ class Request:
         return max(0.0, self.admit_t - self.submit_t)
 
 
+@dataclasses.dataclass
+class SlotExport:
+    """One in-flight request's complete per-slot serving state, detached
+    from its session: the KV/SSM cache slice (every cache leaf indexed at
+    the slot's batch row), the slot-local write position, and the last
+    sampled token (the next decode input). Produced by
+    :meth:`ServeSession.export_slot`, consumed by
+    :meth:`ServeSession.import_slot` — the live-migration cache handoff.
+    Greedy decode resumes bit-exactly on the importing session as long as
+    both sessions share (cfg, max_len) and an execution-compatible policy;
+    sampled (temperature > 0) decode follows the importing session's RNG
+    stream instead."""
+    request: Request
+    caches: Any                      # pytree: leaf shapes (n_layer, ...)
+    pos: int
+    token: int
+
+
 # Jitted step cache: sessions sharing (cfg, rt, temperature) share the
 # compiled serve/prefill functions instead of re-tracing per session (the
 # scheduler tests spin up many short-lived sessions over one tiny model).
@@ -143,6 +162,16 @@ def _write_slot_cache(full, new, slot):
             return f.at[:, slot, :s].set(row.astype(f.dtype))
         return f.at[:, slot].set(row.astype(f.dtype))
     return jax.tree_util.tree_map_with_path(write, full, new)
+
+
+@functools.partial(jax.jit, donate_argnums=(0,))
+def _restore_slot_cache(full, state, slot):
+    """Write one exported slot's cache state (every leaf already sliced to
+    its slot row, full max_len for k/v/pos) wholesale into ``slot`` of a
+    batched session cache — the receiving half of a live cache handoff.
+    Jitted + donated like :func:`_write_slot_cache`."""
+    return jax.tree_util.tree_map(
+        lambda f, s: f.at[:, slot].set(s.astype(f.dtype)), full, state)
 
 
 @functools.partial(jax.jit, donate_argnums=(0,))
@@ -227,12 +256,31 @@ class ServeSession:
         self.completed: List[Request] = []
 
     # -- slot-level API (used by the scheduler) ----------------------------
+    def _policy_scope(self):
+        """Partition-local policy scope around every prefill/decode call:
+        trace-time consumers that would fall back to the ambient default
+        policy resolve THIS session's policy instead — under heterogeneous
+        per-partition policies the ambient default belongs to no one."""
+        if isinstance(self.policy, ex.ExecutionPolicy):
+            return ex.policy_scope(self.policy)
+        return contextlib.nullcontext()
+
+    def _policy_tag(self) -> Dict[str, str]:
+        """Event attribution for this session's serving ops."""
+        if isinstance(self.policy, ex.ExecutionPolicy):
+            return {"policy": self.policy.spec(),
+                    "backend": self.policy.backend}
+        return {}
+
     @property
     def n_active(self) -> int:
         return sum(s is not None for s in self.slots)
 
     def has_free_slot(self) -> bool:
         return any(s is None for s in self.slots)
+
+    def free_slots(self) -> int:
+        return sum(s is None for s in self.slots)
 
     def admit(self, req: Request) -> int:
         """Bulk-prefill ``req`` into a free slot and sample its first
@@ -247,12 +295,13 @@ class ServeSession:
             raise ValueError(f"prompt length {lp} not in [1, {self.max_len})")
         prompt = jnp.asarray(np.asarray(req.prompt, np.int32))[None, :]
         t0 = time.perf_counter()
-        logits, pcaches = self.prefill_fn(self.params, prompt)
+        with self._policy_scope():
+            logits, pcaches = self.prefill_fn(self.params, prompt)
         if self.tracer is not None:
             jax.block_until_ready(logits)
             self.tracer.record(
                 "prefill", m=lp, k=self.cfg.d_model, n=self.cfg.d_ff,
-                precision=self.cfg.precision,
+                precision=self.cfg.precision, **self._policy_tag(),
                 wall_s=time.perf_counter() - t0,
                 tenant=req.tenant or "", meta={"uid": req.uid, "slot": slot})
         self.caches = _write_slot_cache(self.caches, pcaches, slot)
@@ -276,6 +325,48 @@ class ServeSession:
         self.caches = _clear_slot_cache(self.caches, slot)
         self.tokens = self.tokens.at[slot, 0].set(0)
 
+    # -- live cache handoff (tenant migration) ------------------------------
+    def export_slot(self, slot: int) -> SlotExport:
+        """Detach ``slot``'s in-flight request with its complete serving
+        state (cache slice, position, next-token input) and clear the slot
+        — the request is NOT finished; it resumes wherever the export is
+        imported. The slot is left exactly as :meth:`free_slot` leaves it,
+        so the next occupant cannot attend to the emigrant's KV rows."""
+        req = self.slots[slot]
+        if req is None:
+            raise ValueError(f"slot {slot} is empty")
+        # Materialize the slices BEFORE _clear_slot_cache donates the
+        # session buffers: these are fresh arrays, not views.
+        state = jax.tree_util.tree_map(lambda f: f[:, slot], self.caches)
+        out = SlotExport(request=req, caches=state,
+                         pos=int(self.slot_pos[slot]),
+                         token=int(self.tokens[slot, 0]))
+        jax.block_until_ready(state)
+        self.free_slot(slot)
+        return out
+
+    def import_slot(self, export: SlotExport) -> int:
+        """Resume an exported in-flight request in a free slot of THIS
+        session. Sessions must share the cache layout — same config and
+        ``max_len`` (checked leaf-by-leaf). Returns the slot index."""
+        slot = next((i for i, s in enumerate(self.slots) if s is None), None)
+        if slot is None:
+            raise RuntimeError("import_slot() with no free slot")
+        ours = [f.shape[:1] + f.shape[2:]
+                for f in jax.tree_util.tree_leaves(self.caches)]
+        theirs = [s.shape
+                  for s in jax.tree_util.tree_leaves(export.caches)]
+        if ours != theirs:
+            raise ValueError(
+                "cache layout mismatch: the exporting session's slot state "
+                "does not fit this session (same cfg and max_len required "
+                "for a live handoff)")
+        self.caches = _restore_slot_cache(self.caches, export.caches, slot)
+        self.slots[slot] = export.request
+        self.slot_pos[slot] = export.pos
+        self.tokens = self.tokens.at[slot, 0].set(export.token)
+        return slot
+
     def decode_once(self) -> List[Request]:
         """One decode step over the active slots (no admission); returns
         the requests that completed this step."""
@@ -283,14 +374,16 @@ class ServeSession:
             return []
         self.rng, sub = jax.random.split(self.rng)
         t0 = time.perf_counter()
-        nxt, _, self.caches = self.step_fn(
-            self.params, self.tokens, self.caches,
-            jnp.asarray(self.slot_pos), sub)
+        with self._policy_scope():
+            nxt, _, self.caches = self.step_fn(
+                self.params, self.tokens, self.caches,
+                jnp.asarray(self.slot_pos), sub)
         nxt_np = np.asarray(nxt[:, 0])       # forces the step to complete
         if self.tracer is not None:
             self.tracer.record(
                 "decode", m=self.batch_slots, k=self.cfg.d_model,
                 n=self.cfg.d_ff, precision=self.cfg.precision,
+                **self._policy_tag(),
                 wall_s=time.perf_counter() - t0,
                 meta={"n_active": self.n_active})
         self.tokens = nxt

@@ -153,6 +153,17 @@ class Tracer:
         return self.record("request", tenant=tenant, wall_s=wall_s,
                            step=step, meta=meta)
 
+    def record_migrate(self, tenant: str, *, src: int, dst: int,
+                       phase: str, step: int = -1, **meta) -> Event:
+        """One live-migration lifecycle event (``phase`` ∈ start / handoff
+        / done). Recorded on *both* endpoints' tracers by the serving
+        runtime so the fused view keeps provenance, and consumed by the
+        fairness accounting tests: a migrated tenant's request events stay
+        keyed by the same tenant id across partitions, so per-tenant
+        percentiles remain exact across the move."""
+        meta.update(src=src, dst=dst, phase=phase)
+        return self.record("migrate", tenant=tenant, step=step, meta=meta)
+
     # -- raw views ----------------------------------------------------------
     def events(self, kind: Optional[str] = None) -> List[Event]:
         with self._lock:
@@ -193,12 +204,33 @@ class Tracer:
             hist[labels[idx]] += 1
         return hist
 
+    def mean_fill(self, n_cores: int = 256) -> Optional[float]:
+        """Mean grid-tile fill (tiles / cores) over the retained
+        matmul/resolve events; ``None`` with no samples. The scalar form
+        of :meth:`occupancy_histogram` that :class:`~repro.runtime.
+        scheduler.AdaptiveQuota` consumes as its second signal: when the
+        observed fill collapses, the §6 guidance is to *shrink* the
+        concurrency budget, not just rebalance it."""
+        fills = [ev.grid_tiles / max(1, n_cores) for ev in self.events()
+                 if ev.kind in ("matmul", "resolve") and ev.grid_tiles]
+        return float(np.mean(fills)) if fills else None
+
     def tenant_counts(self, kind: str = "request") -> Dict[str, int]:
         """Monotonic per-tenant event totals — exact on long runs (kept as
         counters, not derived from the evicting ring)."""
         with self._lock:
             return {tenant: c for (k, tenant), c
                     in self._tenant_counts.items() if k == kind}
+
+    def known_tenants(self) -> List[str]:
+        """Every tenant id that ever produced *any* event (register /
+        route / admit / request / migrate …), sorted. Backed by the
+        monotonic counters, so a tenant that was registered but never
+        submitted a request still shows up — the fairness-report views
+        must enumerate the full tenant population, not just the tenants
+        with traffic."""
+        with self._lock:
+            return sorted({tenant for (_, tenant) in self._tenant_counts})
 
     def tenant_latencies(self, metric: str = "wall_s"
                          ) -> Dict[str, List[float]]:
@@ -318,14 +350,23 @@ class Tracer:
             lines.append("  slowest shapes (EMA): " + "; ".join(
                 f"{m}x{k}x{n}/{p or '?'}={s * 1e3:.2f}ms"
                 for (m, k, n, p), s in worst))
-        tcounts = self.tenant_counts()
-        if tcounts:
+        known = self.known_tenants()
+        if known:
+            tcounts = self.tenant_counts()
             pcts = self.tenant_percentiles()
+            # enumerate EVERY known tenant: one that registered but never
+            # submitted still appears (0 req) instead of silently
+            # vanishing from the report
             lines.append("  tenants: " + "; ".join(
-                f"{t}: {c} req p50={pcts[t]['p50'] * 1e3:.1f}ms "
-                f"p99={pcts[t]['p99'] * 1e3:.1f}ms"
-                for t, c in sorted(tcounts.items())))
+                (f"{t}: {tcounts[t]} req "
+                 f"p50={pcts.get(t, {}).get('p50', 0.0) * 1e3:.1f}ms "
+                 f"p99={pcts.get(t, {}).get('p99', 0.0) * 1e3:.1f}ms")
+                if t in tcounts else f"{t}: 0 req"
+                for t in known))
             lines.append(f"  tenant fairness={self.tenant_fairness():.3f}")
+        migs = self.counts().get("migrate", 0)
+        if migs:
+            lines.append(f"  migrations: {migs} events")
         parts = {p: c for p, c in self.partition_counts().items() if p >= 0}
         if parts:
             lines.append("  partitions: " + " ".join(
