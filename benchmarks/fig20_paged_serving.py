@@ -1,0 +1,196 @@
+"""Fig 20 (beyond-paper) — paged serving cache: density, latency, handoff.
+
+The dense serving cache pins ``slots × max_len`` KV rows per layer at
+session construction, so resident tenants per partition are capped by
+slot count regardless of how little of each slot is written. The paged
+cache (core/paging.py + the paged decode path) allocates fixed-size pages
+lazily from a shared pool, which converts the same HBM budget into
+pages-in-use — short requests stop paying for ``max_len``.
+
+Three studies, dense vs paged at FIXED cache memory (the dense baseline's
+``slots × max_len`` token capacity == the paged pool's ``pages ×
+page_size``):
+
+* **density** — identical request mix through both layouts; the paged
+  session admits by free-*page* headroom and holds ≥4× the concurrent
+  residents (the acceptance bar). Greedy outputs are asserted
+  token-for-token identical — paging is a memory-layout change, not a
+  numerics change.
+* **decode latency** — per-step wall time (mean + p99) for both layouts.
+* **migration handoff** — a mid-request export/import at growing decode
+  depths: dense handoffs move the full ``max_len`` slice no matter what;
+  paged handoffs move pages-in-use, so bytes scale with progress.
+
+Results persist to ``BENCH_fig20.json`` at the repo root — the first
+``BENCH_*`` perf-trajectory file (ROADMAP) future CI can gate on. The
+paged flash-decode tiling sweep (``pagedsweep/...`` records,
+kernels/paged_attention.py) rides along so the Table-3 evidence path
+ingests the kernel's page geometries.
+"""
+import json
+import time
+from pathlib import Path
+
+import jax
+import numpy as np
+
+from repro.configs import get_reduced
+from repro.core.characterization import Record
+from repro.core.concurrency import fairness
+from repro.models import init_params
+from repro.models.layers import RuntimeCfg
+from repro.runtime.serve_loop import (
+    Request, ServeSession, export_nbytes)
+
+RT = RuntimeCfg(ssm_chunk=16)
+MAX_LEN = 64
+PAGE = 8                             # tokens per page -> 8 pages per slot
+DENSE_SLOTS = 2                      # the fixed-memory baseline
+POOL_PAGES = DENSE_SLOTS * (MAX_LEN // PAGE)   # same token capacity
+N_REQ = 8
+PROMPT_LEN = 4
+MAX_NEW = 8                          # ~12 written positions -> 2 pages
+
+BENCH_PATH = Path(__file__).resolve().parent.parent / "BENCH_fig20.json"
+
+_MODEL = None
+
+
+def _model():
+    global _MODEL
+    if _MODEL is None:
+        cfg = get_reduced("llama3-8b")
+        _MODEL = (cfg, init_params(jax.random.PRNGKey(0), cfg))
+    return _MODEL
+
+
+def _requests(cfg, seed=0):
+    rng = np.random.default_rng(seed)
+    return [Request(uid=uid, tenant=f"t{uid}",
+                    prompt=rng.integers(0, cfg.vocab_size,
+                                        PROMPT_LEN).astype(np.int32),
+                    max_new=MAX_NEW)
+            for uid in range(N_REQ)]
+
+
+def _session(paged: bool, slots: int) -> ServeSession:
+    cfg, params = _model()
+    kw = dict(paged=True, page_size=PAGE, pages=POOL_PAGES) if paged else {}
+    return ServeSession(params, cfg, batch_slots=slots, max_len=MAX_LEN,
+                        rt=RT, **kw)
+
+
+def _drive(sess, requests):
+    """submit-all + drain, tracking peak residents and per-step wall."""
+    for r in requests:
+        sess.submit(r)
+    peak, walls, steps = 0, [], 0
+    # warm the decode step outside the timed region (compile once)
+    while (sess.queue or sess.n_active) and steps < 10_000:
+        sess._admit_from_queue()
+        peak = max(peak, sess.n_active)
+        t0 = time.perf_counter()
+        sess.decode_once()
+        walls.append(time.perf_counter() - t0)
+        steps += 1
+    toks = sum(len(r.out) for r in requests)
+    # drop the first (compile-bearing) step from the latency stats
+    lat = np.asarray(walls[1:] or walls)
+    per_tenant = {r.tenant: len(r.out) for r in requests}
+    return {
+        "resident_peak": peak,
+        "steps": steps,
+        "tokens": toks,
+        "tokens_per_step": round(toks / max(steps, 1), 3),
+        "mean_step_us": round(float(lat.mean()) * 1e6, 1),
+        "p99_step_us": round(float(np.percentile(lat, 99)) * 1e6, 1),
+        "fairness": round(fairness(list(per_tenant.values())), 4),
+    }
+
+
+def _density():
+    cfg, _ = _model()
+    dense_reqs = _requests(cfg)
+    paged_reqs = _requests(cfg)
+    d = _drive(_session(False, DENSE_SLOTS), dense_reqs)
+    # paged: one slot per potential resident (slot bookkeeping is host-side
+    # metadata; PAGES is the memory), same pool capacity as the dense cache
+    p = _drive(_session(True, N_REQ * 2), paged_reqs)
+    assert [r.out for r in dense_reqs] == [r.out for r in paged_reqs], \
+        "paged greedy decode diverged from dense"
+    d["cache_tokens"] = DENSE_SLOTS * MAX_LEN
+    p["cache_tokens"] = POOL_PAGES * PAGE
+    p["page_size"], p["pages"] = PAGE, POOL_PAGES
+    return d, p
+
+
+def _handoff():
+    """Export/import one in-flight request at several decode depths."""
+    cfg, _ = _model()
+    rows = []
+    for paged in (False, True):
+        for depth in (2, 6, 14):     # decoded tokens before the handoff
+            src = _session(paged, DENSE_SLOTS)
+            dst = _session(paged, DENSE_SLOTS)
+            req = Request(uid=0, prompt=_requests(cfg)[0].prompt.copy(),
+                          max_new=MAX_NEW + 16)
+            src.admit(req)
+            for _ in range(depth):
+                src.decode_once()
+            t0 = time.perf_counter()
+            export = src.export_slot(0)
+            dst.import_slot(export)
+            wall = time.perf_counter() - t0
+            rows.append({
+                "layout": "paged" if paged else "dense",
+                "tokens_at_handoff": len(req.out),
+                "pages_moved": export.pages,
+                "handoff_bytes": export_nbytes(export),
+                "wall_us": round(wall * 1e6, 1),
+            })
+    return rows
+
+
+def run():
+    dense, paged = _density()
+    handoff = _handoff()
+
+    records = [
+        Record(name="fig20/density/dense", us_per_call=dense["mean_step_us"],
+               derived=dense),
+        Record(name="fig20/density/paged", us_per_call=paged["mean_step_us"],
+               derived=paged),
+    ]
+    for row in handoff:
+        records.append(Record(
+            name=(f"fig20/handoff/{row['layout']}/"
+                  f"t{row['tokens_at_handoff']}"),
+            us_per_call=row["wall_us"], derived=row))
+
+    # paged flash-decode kernel page-geometry sweep -> autotune evidence
+    from repro.kernels.paged_attention import sweep_paged_tilings
+    sweep = sweep_paged_tilings(batch=DENSE_SLOTS, seq=MAX_LEN,
+                                head_dim=_model()[0].head_dim,
+                                kv_heads=_model()[0].num_kv_heads,
+                                heads=_model()[0].num_heads)
+    records.extend(sweep)
+
+    summary = {
+        "figure": "fig20_paged_serving",
+        "density_ratio": round(paged["resident_peak"]
+                               / max(dense["resident_peak"], 1), 2),
+        "dense": dense,
+        "paged": paged,
+        "handoff": handoff,
+        "pages_moved": sum(r["pages_moved"] for r in handoff),
+        "pagedsweep": [{"name": r.name, "us_per_call": round(r.us_per_call, 2)}
+                       for r in sweep],
+    }
+    BENCH_PATH.write_text(json.dumps(summary, indent=2) + "\n")
+    return records
+
+
+if __name__ == "__main__":
+    for rec in run():
+        print(rec.csv())
+    print(f"[fig20] wrote {BENCH_PATH}")

@@ -37,6 +37,7 @@ MODULES = [
     "fig17_serving_fairness",
     "fig18_partitioned_serving",
     "fig19_migration",
+    "fig20_paged_serving",
     "roofline_report",
 ]
 

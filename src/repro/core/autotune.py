@@ -171,7 +171,11 @@ class AutotuneStore:
         n_in = 0
         for r in records:
             parts = r.name.split("/")
-            sweep = ex.parse_blocksweep_name(r.name)
+            # blocksweep (GEMM tilings) and pagedsweep (paged flash-decode
+            # page geometries) share the shape grammar and the per-key-min
+            # block store.
+            sweep = ex.parse_blocksweep_name(r.name) \
+                or ex.parse_pagedsweep_name(r.name)
             if sweep is not None:
                 m, n, k, prec, blocks = sweep
                 self.record_block(m, k, n, prec, blocks,

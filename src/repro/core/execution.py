@@ -389,6 +389,30 @@ def parse_blocksweep_name(name: str
     return m, n, k, parts[1], blocks
 
 
+def parse_pagedsweep_name(name: str
+                          ) -> Optional[Tuple[int, int, int, str,
+                                              Tuple[int, int, int]]]:
+    """Parse a ``pagedsweep/{prec}/{m}x{n}x{k}/{bm}x{bn}x{bk}`` record
+    name (the paged flash-decode tiling sweep,
+    :func:`repro.kernels.paged_attention.sweep_paged_tilings`) into
+    ``(m, n, k, prec, (bm, bn, bk))`` — m = query rows (slots), n = total
+    KV length, k = head_dim, blocks = (1, page_size, head_dim). Same
+    shape grammar as :func:`parse_blocksweep_name` so the Table-3
+    evidence path ingests both."""
+    parts = name.split("/")
+    if len(parts) != 4 or parts[0] != "pagedsweep" \
+            or parts[1] not in SWEEP_DTYPES:
+        return None
+    try:
+        m, n, k = (int(v) for v in parts[2].split("x"))
+        blocks = tuple(int(v) for v in parts[3].split("x"))
+    except ValueError:
+        return None
+    if len(blocks) != 3:
+        return None
+    return m, n, k, parts[1], blocks
+
+
 def seed_cache_from_records(records: Sequence[Any],
                             cache: Optional[BlockShapeCache] = None) -> int:
     """Ingest probe Records into the block cache; returns how many were

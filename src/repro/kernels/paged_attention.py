@@ -1,0 +1,275 @@
+"""Pallas TPU kernel: paged flash-decode attention (page-table walk).
+
+The paged serving cache (core/paging.py) stores KV in a pool of
+fixed-size pages; each decode slot owns a logical→physical page table.
+This kernel fuses the whole per-token attention read into one pass — the
+§9.2 "increase occupancy via fusion" lever applied to the serving hot
+path: one query row per active slot, online softmax over the slot's
+pages, and the page table itself *scalar-prefetched* so each page's
+physical block index is known before its DMA is issued
+(``pltpu.PrefetchScalarGridSpec``). HBM traffic is exactly the pages a
+slot actually wrote — never the dense ``max_len`` rectangle.
+
+Layout: q ``(B, h, hd)``; pools ``(P, page_size, kvh, hd)`` (GQA resolved
+by the BlockSpec index map, like kernels/flash_attention.py); page table
+``(B, max_pages)`` int32 with ``-1`` = unallocated; ``lengths (B,)`` =
+written positions per slot (the current token already written).
+
+grid = (B, h, max_pages), pages innermost; m/l/acc live in VMEM scratch
+across the page sweep. Unallocated or fully-past-``length`` pages are
+skipped via ``pl.when`` (no MXU pass, and their index map clamps to page
+0 so no out-of-bounds DMA is formed).
+
+Like every kernel here it runs through the interpreter off-TPU
+(``interpret=True``); :func:`paged_attention_reference` is the jnp
+oracle the exactness tests compare against. The serving decode step
+(models/transformer.py) uses an XLA gather that is *bit-exact* against
+the dense path — this kernel is the fused hardware path and matches the
+reference within flash-accumulation tolerance.
+
+A ``pallas_paged`` :class:`~repro.kernels.registry.MatmulBackend` is
+registered on import (GEMM entries delegate to the ``pallas`` backend) so
+``resolve_policy`` can name the paged substrate and telemetry events
+carry it; :func:`sweep_paged_tilings` measures the kernel across page
+geometries and emits ``pagedsweep/...`` Records for the autotune store.
+"""
+from __future__ import annotations
+
+import functools
+import math
+import time
+from typing import List, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels import registry
+
+NEG_INF = -1e30
+
+# Page geometries the tiling sweep measures: one (1, page_size, hd) tile
+# per grid step (one query row, one page of KV depth-``hd``).
+SWEEP_PAGE_SIZES = (8, 16, 32)
+
+
+# ---------------------------------------------------------------------------
+# jnp reference (the oracle)
+# ---------------------------------------------------------------------------
+
+def paged_attention_reference(q: jax.Array, k_pages: jax.Array,
+                              v_pages: jax.Array, page_map: jax.Array,
+                              lengths: jax.Array) -> jax.Array:
+    """Gather-then-attend oracle. q ``(B, h, hd)``; pools
+    ``(P, ps, kvh, hd)``; page_map ``(B, mp)``; lengths ``(B,)`` →
+    ``(B, h, hd)`` f32."""
+    B, h, hd = q.shape
+    _, ps, kvh, _ = k_pages.shape
+    mp = page_map.shape[1]
+    g = h // kvh
+    safe = jnp.maximum(page_map, 0)                      # (B, mp)
+    k = k_pages[safe].reshape(B, mp * ps, kvh, hd)
+    v = v_pages[safe].reshape(B, mp * ps, kvh, hd)
+    pos = jnp.arange(mp * ps, dtype=jnp.int32)
+    valid = (pos[None, :] < lengths[:, None]) \
+        & jnp.repeat(page_map >= 0, ps, axis=1)          # (B, S)
+    q4 = q.reshape(B, kvh, g, hd).astype(jnp.float32)
+    s = jnp.einsum("bkgd,bskd->bkgs", q4, k.astype(jnp.float32))
+    s = s * (hd ** -0.5)
+    s = jnp.where(valid[:, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgs,bskd->bkgd", p, v.astype(jnp.float32))
+    return o.reshape(B, h, hd)
+
+
+# ---------------------------------------------------------------------------
+# The Pallas kernel
+# ---------------------------------------------------------------------------
+
+def _paged_kernel(pm_ref, len_ref, q_ref, k_ref, v_ref, o_ref,
+                  m_ref, l_ref, acc_ref, *,
+                  page_size: int, n_steps: int, scale: float):
+    b, j = pl.program_id(0), pl.program_id(2)
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    length = len_ref[b]
+    phys = pm_ref[b, j]
+    # skip pages never allocated or entirely past the written prefix
+    run = (phys >= 0) & (j * page_size < length)
+
+    @pl.when(run)
+    def _block():
+        q = q_ref[0, 0].astype(jnp.float32).reshape(1, -1)   # (1, hd)
+        k = k_ref[0, :, 0].astype(jnp.float32)               # (ps, hd)
+        v = v_ref[0, :, 0].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        kpos = j * page_size + jax.lax.broadcasted_iota(
+            jnp.int32, (1, page_size), 1)
+        s = jnp.where(kpos < length, s, NEG_INF)             # (1, ps)
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[:, None])
+        p = jnp.where((m_new > NEG_INF / 2)[:, None], p, 0.0)
+        alpha = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=-1)
+        acc_ref[...] = (acc_ref[...] * alpha[:, None]
+                        + jax.lax.dot_general(
+                            p, v, (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32))
+        m_ref[...] = m_new
+
+    @pl.when(j == n_steps - 1)
+    def _store():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0, 0] = (acc_ref[...] / l[:, None])[0].astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def paged_flash_decode_pallas(q: jax.Array, k_pages: jax.Array,
+                              v_pages: jax.Array, page_map: jax.Array,
+                              lengths: jax.Array, *,
+                              interpret: bool = False) -> jax.Array:
+    """Fused page-walking flash decode. Shapes as in
+    :func:`paged_attention_reference`; returns ``(B, h, hd)`` f32."""
+    B, h, hd = q.shape
+    _, ps, kvh, _ = k_pages.shape
+    mp = page_map.shape[1]
+    assert h % kvh == 0
+    group = h // kvh
+    scale = 1.0 / math.sqrt(hd)
+    page_map = page_map.astype(jnp.int32)
+    lengths = lengths.astype(jnp.int32)
+
+    kernel = functools.partial(_paged_kernel, page_size=ps, n_steps=mp,
+                               scale=scale)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(B, h, mp),
+        in_specs=[
+            pl.BlockSpec((1, 1, hd), lambda b, hh, j, pm, ln: (b, hh, 0)),
+            # physical page index comes from the prefetched table; -1
+            # (skipped by pl.when) clamps to page 0 so the index is
+            # always in-bounds
+            pl.BlockSpec((1, ps, 1, hd),
+                         lambda b, hh, j, pm, ln, g=group:
+                         (jnp.maximum(pm[b, j], 0), 0, hh // g, 0)),
+            pl.BlockSpec((1, ps, 1, hd),
+                         lambda b, hh, j, pm, ln, g=group:
+                         (jnp.maximum(pm[b, j], 0), 0, hh // g, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, hd),
+                               lambda b, hh, j, pm, ln: (b, hh, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((1,), jnp.float32),       # m
+            pltpu.VMEM((1,), jnp.float32),       # l
+            pltpu.VMEM((1, hd), jnp.float32),    # acc
+        ],
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, h, hd), jnp.float32),
+        interpret=interpret,
+    )(page_map, lengths, q, k_pages, v_pages)
+
+
+def paged_decode_attention(q, k_pages, v_pages, page_map, lengths, *,
+                           tracer=None) -> jax.Array:
+    """Dispatch wrapper: the fused kernel (interpreted off-TPU) with a
+    trace-time telemetry event so the observatory sees the paged
+    substrate like any other backend's op."""
+    tr = tracer
+    if tr is None:
+        from repro.runtime import telemetry
+        tr = telemetry.get_tracer()
+    B, h, hd = q.shape
+    ps = k_pages.shape[1]
+    if tr is not None:
+        tr.record("paged_attn", m=B, k=hd, n=ps * page_map.shape[1],
+                  backend="pallas_paged",
+                  meta={"page_size": ps, "pages": int(k_pages.shape[0])})
+    return paged_flash_decode_pallas(
+        q, k_pages, v_pages, page_map, lengths,
+        interpret=registry.interpret_mode())
+
+
+# ---------------------------------------------------------------------------
+# Backend registration — the paged substrate is nameable/observable
+# ---------------------------------------------------------------------------
+
+_pallas = registry.get_backend("pallas")
+registry.register_backend(registry.MatmulBackend(
+    name="pallas_paged",
+    dense=_pallas.dense,
+    fp8=_pallas.fp8,
+    fp8_qdot=_pallas.fp8_qdot,
+    sparse24=_pallas.sparse24,
+    description="pallas GEMMs + fused page-walking flash decode "
+                "(kernels/paged_attention.py)",
+))
+
+
+# ---------------------------------------------------------------------------
+# Tiling sweep → autotune evidence
+# ---------------------------------------------------------------------------
+
+def _mk_pool(key, n_pages, ps, kvh, hd, dtype=jnp.bfloat16):
+    k1, k2 = jax.random.split(key)
+    shape = (n_pages, ps, kvh, hd)
+    return (jax.random.normal(k1, shape, dtype),
+            jax.random.normal(k2, shape, dtype))
+
+
+def sweep_paged_tilings(batch: int = 4, kv_heads: int = 2, heads: int = 4,
+                        head_dim: int = 16, seq: int = 64,
+                        page_sizes: Optional[List[int]] = None,
+                        iters: int = 3, record_cache: bool = True):
+    """Measure the fused kernel across page geometries and return
+    ``Record``s named ``pagedsweep/bf16/{B}x{S}x{hd}/{1}x{ps}x{hd}`` —
+    the measured tile is one query row × one (ps, hd) page block. The
+    records flow into the block-shape evidence store via
+    ``autotune.AutotuneStore.add_records`` (same path as the Table-3
+    blocksweep) and, with ``record_cache``, straight into the global
+    ``execution.BLOCK_CACHE``."""
+    from repro.core import execution as ex
+    from repro.core.characterization import Record
+
+    out = []
+    key = jax.random.PRNGKey(0)
+    for ps in (page_sizes or list(SWEEP_PAGE_SIZES)):
+        if seq % ps:
+            continue
+        mp = seq // ps
+        n_pages = batch * mp + 1
+        kq, kp = jax.random.split(jax.random.fold_in(key, ps))
+        q = jax.random.normal(kq, (batch, heads, head_dim), jnp.bfloat16)
+        k_pages, v_pages = _mk_pool(kp, n_pages, ps, kv_heads, head_dim)
+        page_map = jnp.arange(batch * mp, dtype=jnp.int32) \
+            .reshape(batch, mp)
+        lengths = jnp.full((batch,), seq, jnp.int32)
+        fn = lambda: paged_flash_decode_pallas(  # noqa: E731
+            q, k_pages, v_pages, page_map, lengths,
+            interpret=registry.interpret_mode())
+        jax.block_until_ready(fn())              # compile/warm
+        t0 = time.perf_counter()
+        for _ in range(iters):
+            jax.block_until_ready(fn())
+        secs = (time.perf_counter() - t0) / iters
+        name = (f"pagedsweep/bf16/{batch}x{seq}x{head_dim}/"
+                f"1x{ps}x{head_dim}")
+        out.append(Record(
+            name=name, us_per_call=secs * 1e6,
+            derived={"page_size": ps, "pages": batch * mp,
+                     "m": batch, "n": seq, "k": head_dim,
+                     "kernel": "paged_flash_decode"}))
+        if record_cache:
+            ex.BLOCK_CACHE.record(batch, head_dim, seq, "bf16",
+                                  (1, ps, head_dim), secs)
+    return out

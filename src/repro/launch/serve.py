@@ -48,7 +48,12 @@ def build_spec(args, policy):
         temperature=args.temperature,
         seed=args.seed,
         policy=policy,
-        migration=MigrationSpec(enabled=args.migrate))
+        migration=MigrationSpec(enabled=args.migrate),
+        # paged flags default off for callers driving build_spec with a
+        # legacy (pre-paging) namespace
+        paged=getattr(args, "paged", False),
+        page_size=getattr(args, "page_size", 16),
+        pages=getattr(args, "pages", None))
 
 
 def main():
@@ -96,6 +101,17 @@ def main():
     ap.add_argument("--migrate", action="store_true",
                     help="[shorthand] enable live tenant migration (the "
                          "load_aware re-route path; see MigrationSpec)")
+    ap.add_argument("--paged", action="store_true",
+                    help="paged serving cache (core/paging.py): per-slot "
+                         "page tables over a shared pool + fused paged "
+                         "flash-decode; greedy output is token-identical "
+                         "to the dense path")
+    ap.add_argument("--page-size", type=int, default=16,
+                    help="token positions per cache page (must divide "
+                         "--max-len)")
+    ap.add_argument("--pages", type=int, default=None,
+                    help="physical pool size in pages (default: dense-"
+                         "equivalent capacity, slots * max_len/page_size)")
     ap.add_argument("--telemetry", action="store_true",
                     help="record per-op/per-tenant events to a Tracer and "
                          "print the observatory summary at exit")
@@ -198,7 +214,12 @@ def main():
                         max_len=args.max_len, rt=rt,
                         temperature=args.temperature, seed=args.seed,
                         policy=policy, auto_backend=args.backend,
-                        verbose_policy=True, telemetry=tracer)
+                        verbose_policy=True, telemetry=tracer,
+                        paged=args.paged, page_size=args.page_size,
+                        pages=args.pages)
+    if args.paged:
+        print(f"[serve] paged cache: page_size={sess.page_size} "
+              f"pages={sess.pages}")
     t0 = time.time()
 
     if args.tenants > 1:

@@ -37,6 +37,12 @@ from repro.models.layers import (
 
 Params = Dict[str, Any]
 
+# Block kinds whose decode KV cache moves into the paged pool. ``attn_local``
+# keeps its rolling-window buffer (already O(window), paging buys nothing)
+# and SSM/linear-attention state stays slot-indexed (constant size per slot —
+# the allocator accounts it as a "state block", core/paging.py).
+PAGED_KINDS = ("attn_dense", "attn_global", "attn_moe", "shared_attn")
+
 
 # ---------------------------------------------------------------------------
 # Init
@@ -295,8 +301,11 @@ def prefill(params: Params, inputs: jax.Array, cfg: ArchConfig,
 # ---------------------------------------------------------------------------
 
 def _decode_block(kind: str, x, p: Params, cache: Params, pos,
-                  cfg: ArchConfig, rt: RuntimeCfg, shared: Optional[Params]):
-    """Returns (x, new_cache)."""
+                  cfg: ArchConfig, rt: RuntimeCfg, shared: Optional[Params],
+                  page_map=None):
+    """Returns (x, new_cache). With ``page_map`` (B, max_pages), the
+    PAGED_KINDS blocks read/write the pooled paged cache instead of the
+    dense per-slot one."""
     if kind == "shared_attn":
         p = shared
     window = cfg.window_size if kind == "attn_local" else 0
@@ -304,7 +313,12 @@ def _decode_block(kind: str, x, p: Params, cache: Params, pos,
     if kind in ("attn_dense", "attn_local", "attn_global", "attn_moe",
                 "shared_attn"):
         h = rms_norm(x, p["norm1"], cfg.norm_eps)
-        a, new_kv = _decode_attn(h, p["attn"], cache, pos, cfg, rt, window)
+        if page_map is not None and kind in PAGED_KINDS:
+            a, new_kv = _paged_decode_attn(h, p["attn"], cache, pos,
+                                           page_map, cfg, rt)
+        else:
+            a, new_kv = _decode_attn(h, p["attn"], cache, pos, cfg, rt,
+                                     window)
         x = x + a
         h = rms_norm(x, p["norm2"], cfg.norm_eps)
         if kind == "attn_moe":
@@ -384,6 +398,80 @@ def _decode_attn(x, p, cache, pos, cfg: ArchConfig, rt: RuntimeCfg,
     return out, {"k": kc, "v": vc, "pos": posc}
 
 
+def _paged_decode_attn(x, p, cache, pos, page_map, cfg: ArchConfig,
+                       rt: RuntimeCfg):
+    """Decode attention over the pooled paged cache.
+
+    ``cache`` leaves are pools: k/v ``(n_pages+1, page_size, kvh, hd)``,
+    pos ``(n_pages+1, page_size)``; ``page_map`` is ``(B, max_pages)``
+    int32 (``-1`` = unallocated). The last physical page is a *trash*
+    page owned by no slot: writes for slots whose current page entry is
+    ``-1`` (idle slots) land there, and gathers of unallocated logical
+    pages read from it — its rows are never attended to because an
+    unallocated logical page's row indices all exceed the slot's ``pos``
+    (tables are prefixes, core/paging.py) and the causal ``arange <=
+    pos`` mask kills them.
+
+    Exactness contract: the gather reconstructs each slot's KV in the
+    *identical* ``(B, max_len, ...)`` layout the dense path uses (row i
+    holds position i; ``max_pages * page_size == max_len``), then runs
+    the *same* mask/softmax/einsum code — masked rows are the same
+    NEG_INF constant in both, their softmax weight underflows to exactly
+    0.0, and 0 × finite garbage is 0, so paged greedy decode is
+    token-for-token identical to dense.
+    """
+    from repro.models.layers import batched_einsum, shard_tag
+    b = x.shape[0]
+    h, kvh, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    g = h // kvh
+    posb = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (b,))
+    q = dense(x, p["w_q"], cfg, rt, "q").reshape(b, 1, h, hd)
+    k = dense(x, p["w_k"], cfg, rt, "k").reshape(b, 1, kvh, hd)
+    v = dense(x, p["w_v"], cfg, rt, "v").reshape(b, 1, kvh, hd)
+    q = attn_mod.apply_rope(q, posb[:, None], cfg.rope_theta)
+    k = attn_mod.apply_rope(k, posb[:, None], cfg.rope_theta)
+    q = shard_tag(rt, q, "decode_q")
+
+    kp, vc_pool, pp = cache["k"], cache["v"], cache["pos"]
+    ps = kp.shape[1]
+    mp = page_map.shape[1]
+    trash = kp.shape[0] - 1
+    page_map = jnp.asarray(page_map, jnp.int32)
+
+    # write the current token at (physical page, in-page offset); idle
+    # slots (entry -1) are routed to the trash page so live pages are
+    # never aliased.
+    lpage = jnp.clip(posb // ps, 0, mp - 1)
+    off = posb % ps
+    phys = jnp.take_along_axis(page_map, lpage[:, None], axis=1)[:, 0]
+    phys = jnp.where(phys >= 0, phys, trash)
+    kp = kp.at[phys, off].set(k[:, 0].astype(kp.dtype))
+    vc_pool = vc_pool.at[phys, off].set(v[:, 0].astype(vc_pool.dtype))
+    pp = pp.at[phys, off].set(posb)
+
+    # gather back into the dense (b, max_len, ...) layout
+    safe = jnp.where(page_map >= 0, page_map, trash)       # (b, mp)
+    kc = kp[safe].reshape(b, mp * ps, kvh, hd)
+    vc = vc_pool[safe].reshape(b, mp * ps, kvh, hd)
+    posc = pp[safe].reshape(b, mp * ps)
+    smax = mp * ps
+
+    # from here: byte-identical to the dense _decode_attn arithmetic
+    scale = hd ** -0.5
+    q5 = q.reshape(b, kvh, g, hd)
+    s = batched_einsum("bkgd,bskd->bkgs", q5, kc, rt,
+                       out_dtype=jnp.float32) * scale
+    valid = (posc >= 0) & (posc <= posb[:, None])
+    valid &= jnp.arange(smax)[None, :] <= posb[:, None]
+    s = jnp.where(valid[:, None, None, :], s, attn_mod.NEG_INF)
+    pr = jax.nn.softmax(s, axis=-1)
+    o = batched_einsum("bkgs,bskd->bkgd", pr.astype(vc.dtype), vc, rt,
+                       out_dtype=jnp.float32)
+    o = o.reshape(b, 1, h * hd).astype(x.dtype)
+    out = dense(o, p["w_o"], cfg, rt, "o")
+    return out, {"k": kp, "v": vc_pool, "pos": pp}
+
+
 def decode_step(params: Params, tokens: jax.Array, caches: Params, pos,
                 cfg: ArchConfig, rt: RuntimeCfg = DEFAULT_RT):
     """One decoding step. tokens: (B, 1) int32; pos: scalar int32 (lockstep
@@ -404,6 +492,53 @@ def decode_step(params: Params, tokens: jax.Array, caches: Params, pos,
         for i, kind in enumerate(pat):
             x, nc = _decode_block(kind, x, p_super[f"b{i}"],
                                   cache_super[f"b{i}"], pos, cfg, rt, shared)
+            new_caches[f"b{i}"] = nc
+        return x, new_caches
+
+    x, new_layer_caches = jax.lax.scan(
+        scan_body, x, (params["layers"], caches["layers"]))
+
+    new_caches = {"layers": new_layer_caches}
+    if "tail" in params:
+        n_tail = cfg.hybrid_tail_layers
+        tails = []
+        for i in range(n_tail):
+            p_i = jax.tree.map(lambda a: a[i], params["tail"])
+            c_i = jax.tree.map(lambda a: a[i], caches["tail"])
+            x, nc = _decode_block("mamba2", x, p_i, c_i, pos, cfg, rt, None)
+            tails.append(nc)
+        new_caches["tail"] = jax.tree.map(lambda *xs: jnp.stack(xs), *tails)
+
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = lm_logits(x[:, 0], params["head"], cfg.vocab_size,
+                       policy=ex.policy_from(cfg, rt))
+    return logits, new_caches
+
+
+def paged_decode_step(params: Params, tokens: jax.Array, caches: Params,
+                      pos, page_map: jax.Array, cfg: ArchConfig,
+                      rt: RuntimeCfg = DEFAULT_RT):
+    """``decode_step`` over a paged cache (``init_paged_cache`` layout).
+
+    ``page_map`` (B, max_pages) int32 is shared by every layer — one
+    physical page id names the same rows in each layer's pool — so it is
+    closed over by the scan body rather than scanned. Tail blocks and
+    non-PAGED_KINDS leaves behave exactly as in ``decode_step``."""
+    x = embed_tokens(tokens, params["embed"]).astype(rt.act_dtype)
+    shared = params.get("shared_attn")
+    pat = cfg.superlayer_pattern
+
+    from repro.models.layers import shard_tag
+
+    def scan_body(carry, inp):
+        x = carry
+        p_super, cache_super = inp
+        x = shard_tag(rt, x, "act_btd")
+        new_caches = {}
+        for i, kind in enumerate(pat):
+            x, nc = _decode_block(kind, x, p_super[f"b{i}"],
+                                  cache_super[f"b{i}"], pos, cfg, rt,
+                                  shared, page_map=page_map)
             new_caches[f"b{i}"] = nc
         return x, new_caches
 
@@ -480,6 +615,42 @@ def init_cache(cfg: ArchConfig, batch: int, max_len: int,
 def cache_shape(cfg: ArchConfig, batch: int, max_len: int,
                 dtype=jnp.bfloat16) -> Params:
     return jax.eval_shape(lambda: init_cache(cfg, batch, max_len, dtype))
+
+
+def init_paged_cache(cfg: ArchConfig, batch: int, max_len: int,
+                     page_size: int, pages: int,
+                     dtype=jnp.bfloat16) -> Params:
+    """Paged twin of ``init_cache``: PAGED_KINDS leaves become pools of
+    ``pages + 1`` physical pages (the extra one is the trash page, see
+    ``_paged_decode_attn``) of ``page_size`` rows each, shared by all
+    slots; everything else (window caches, SSM state, tail) stays
+    slot-indexed dense. Requires ``max_len % page_size == 0`` so the
+    gathered layout matches the dense one row-for-row."""
+    if max_len % page_size:
+        raise ValueError(f"max_len={max_len} not a multiple of "
+                         f"page_size={page_size}")
+    pat = cfg.superlayer_pattern
+    n_super = cfg.num_superlayers
+    kvh, hd = cfg.num_kv_heads, cfg.head_dim
+
+    def one_block(kind):
+        if kind in PAGED_KINDS:
+            p1 = pages + 1
+            return {"k": jnp.zeros((p1, page_size, kvh, hd), dtype),
+                    "v": jnp.zeros((p1, page_size, kvh, hd), dtype),
+                    "pos": jnp.full((p1, page_size), -1, jnp.int32)}
+        return _block_cache(kind, batch, max_len, cfg, dtype)
+
+    one_super = {f"b{i}": one_block(kind) for i, kind in enumerate(pat)}
+    stacked = jax.tree.map(
+        lambda a: jnp.broadcast_to(a, (n_super,) + a.shape).copy(), one_super)
+    caches = {"layers": stacked}
+    n_tail = cfg.hybrid_tail_layers
+    if n_tail:
+        tail = _block_cache("mamba2", batch, max_len, cfg, dtype)
+        caches["tail"] = jax.tree.map(
+            lambda a: jnp.broadcast_to(a, (n_tail,) + a.shape).copy(), tail)
+    return caches
 
 
 # ---------------------------------------------------------------------------

@@ -571,9 +571,14 @@ class StreamScheduler:
         return min(cands, key=lambda t: t.vtime)
 
     def _admit_free_slots(self):
+        # Admission gates on the session's full headroom check — on paged
+        # sessions that is free-*page* headroom for the candidate's prompt,
+        # not just a free slot (dense can_admit ≡ has_free_slot).
         while self.session.has_free_slot():
             t = self._pick()
             if t is None:
+                break
+            if not self.session.can_admit(t.queue[0]):
                 break
             req = t.queue.pop(0)
             self.session.admit(req)

@@ -26,7 +26,10 @@ import numpy as np
 
 from repro.configs.base import ArchConfig
 from repro.core import execution as ex
-from repro.models import decode_step, init_cache, prefill
+from repro.core import paging
+from repro.models import (
+    PAGED_KINDS, decode_step, init_cache, init_paged_cache, prefill)
+from repro.models.transformer import paged_decode_step
 from repro.models.layers import RuntimeCfg, DEFAULT_RT
 
 
@@ -57,6 +60,27 @@ def make_serve_step(cfg: ArchConfig, rt: RuntimeCfg = DEFAULT_RT,
             nxt = jnp.argmax(logits, axis=-1)
         return nxt[:, None].astype(jnp.int32), logits, new_caches
     return serve_step
+
+
+def make_paged_serve_step(cfg: ArchConfig, rt: RuntimeCfg = DEFAULT_RT,
+                          temperature: float = 0.0,
+                          policy: Optional[ex.ExecutionPolicy] = None):
+    """``make_serve_step`` over the paged cache layout: the step takes an
+    extra ``page_map`` (B, max_pages) int32 operand (``-1`` = unallocated)
+    and routes PAGED_KINDS attention through the pooled pages. Greedy
+    sampling is identical — paged decode is bit-exact vs dense."""
+    if policy is not None:
+        cfg, rt = ex.apply_policy(cfg, rt, policy)
+
+    def paged_serve_step(params, tokens, caches, pos, page_map, rng):
+        logits, new_caches = paged_decode_step(params, tokens, caches, pos,
+                                               page_map, cfg, rt)
+        if temperature > 0:
+            nxt = jax.random.categorical(rng, logits / temperature, axis=-1)
+        else:
+            nxt = jnp.argmax(logits, axis=-1)
+        return nxt[:, None].astype(jnp.int32), logits, new_caches
+    return paged_serve_step
 
 
 # ---------------------------------------------------------------------------
@@ -105,6 +129,18 @@ class SlotExport:
     caches: Any                      # pytree: leaf shapes (n_layer, ...)
     pos: int
     token: int
+    # Paged handoff metadata (0/0 on dense exports): paged leaves in
+    # ``caches`` are shaped (n_layer, pages, page_size, ...) — only the
+    # pages the slot actually wrote travel, so handoff volume is
+    # O(pages-in-use), not O(max_len).
+    pages: int = 0
+    page_size: int = 0
+
+
+def export_nbytes(export: SlotExport) -> int:
+    """Bytes of cache state a handoff moves (the fig20 migration metric)."""
+    return sum(int(np.prod(l.shape)) * l.dtype.itemsize
+               for l in jax.tree_util.tree_leaves(export.caches))
 
 
 # Jitted step cache: sessions sharing (cfg, rt, temperature) share the
@@ -188,6 +224,109 @@ def _clear_slot_cache(caches, slot):
     return jax.tree_util.tree_map_with_path(clear, caches)
 
 
+# -- paged-cache twins of the slot helpers ----------------------------------
+# Paged leaves live under caches["layers"]["b{i}"] for PAGED_KINDS blocks,
+# pooled as (n_super, n_pages+1, page_size, ...); everything else (window
+# caches, SSM state, tail) keeps the dense slot-indexed layout and is
+# handled exactly like the dense helpers above. ``phys`` vectors are padded
+# to the per-slot table width with the trash-page index so the jitted
+# scatters have a fixed shape — trash writes only ever carry scrub values.
+
+def _paged_blocks(pat) -> frozenset:
+    return frozenset(f"b{i}" for i, kind in enumerate(pat)
+                     if kind in PAGED_KINDS)
+
+
+def _is_paged_leaf(path, paged_blocks) -> bool:
+    if len(path) < 3:
+        return False
+    root = str(getattr(path[0], "key", ""))
+    blk = str(getattr(path[1], "key", ""))
+    return (root == "layers" and blk in paged_blocks
+            and _leaf_key(path) in _SEQ_LEAVES)
+
+
+@functools.partial(jax.jit, static_argnums=(0,), donate_argnums=(1,))
+def _paged_write_prompt(pat, full, new, slot, phys):
+    """Paged ``_write_slot_cache``: the batch-1 prefill cache's seq rows
+    are padded to ``max_len`` (k/v with zeros, pos with -1 — exactly the
+    scrubbed-page values), split into pages, and scattered to the slot's
+    physical pages. ``phys`` is (max_pages,) int32, unallocated entries
+    pointing at the trash page (they carry pure padding, so the duplicate
+    trash writes are deterministic)."""
+    paged = _paged_blocks(pat)
+
+    def write(path, f, n):
+        row = n[:, 0]                             # drop the batch-1 dim
+        if _is_paged_leaf(path, paged):
+            ps = f.shape[2]
+            mp = phys.shape[0]
+            s = row.shape[1]
+            pad_shape = (row.shape[0], mp * ps - s) + row.shape[2:]
+            if _leaf_key(path) == "pos":
+                fill = jnp.full(pad_shape, -1, row.dtype)
+            else:
+                fill = jnp.zeros(pad_shape, row.dtype)
+            slab = jnp.concatenate([row, fill], axis=1).reshape(
+                (row.shape[0], mp, ps) + row.shape[2:])
+            return f.at[:, phys].set(slab.astype(f.dtype))
+        if _leaf_key(path) in _SEQ_LEAVES:
+            s = row.shape[1]
+            return f.at[:, slot, :s].set(row.astype(f.dtype))
+        return f.at[:, slot].set(row.astype(f.dtype))
+    return jax.tree_util.tree_map_with_path(write, full, new)
+
+
+@functools.partial(jax.jit, static_argnums=(0,), donate_argnums=(1,))
+def _paged_clear_slot(pat, caches, slot, phys):
+    """Paged ``_clear_slot_cache``: scrub the slot's released physical
+    pages back to their init state (k/v zeroed, pos -1) *before* the
+    allocator reuses them — free-list reuse can never leak a previous
+    tenant's KV — and clear the slot's dense (state/window) leaves."""
+    paged = _paged_blocks(pat)
+
+    def clear(path, f):
+        if _is_paged_leaf(path, paged):
+            ps = f.shape[2]
+            mp = phys.shape[0]
+            shape = (f.shape[0], mp, ps) + f.shape[3:]
+            if _leaf_key(path) == "pos":
+                return f.at[:, phys].set(jnp.full(shape, -1, f.dtype))
+            return f.at[:, phys].set(jnp.zeros(shape, f.dtype))
+        if _leaf_key(path) == "pos":
+            return f.at[:, slot].set(-1)
+        return f.at[:, slot].set(jnp.zeros((), f.dtype))
+    return jax.tree_util.tree_map_with_path(clear, caches)
+
+
+def _paged_take_slot(pat, caches, slot, page_ids):
+    """Gather one slot's state for export: paged leaves as the slot's
+    pages-in-use only (n_super, n_used, page_size, ...), dense leaves as
+    the slot row. Unjitted — handoffs are rare and variable-sized."""
+    paged = _paged_blocks(pat)
+    idx = jnp.asarray(page_ids, jnp.int32)
+
+    def take(path, f):
+        if _is_paged_leaf(path, paged):
+            return f[:, idx]
+        return f[:, slot]
+    return jax.tree_util.tree_map_with_path(take, caches)
+
+
+def _paged_put_slot(pat, caches, state, slot, page_ids):
+    """Scatter an exported slot's state into freshly allocated pages
+    (paged leaves) and the slot row (dense leaves) — the receiving half
+    of an O(pages) handoff."""
+    paged = _paged_blocks(pat)
+    idx = jnp.asarray(page_ids, jnp.int32)
+
+    def put(path, f, s):
+        if _is_paged_leaf(path, paged):
+            return f.at[:, idx].set(s.astype(f.dtype))
+        return f.at[:, slot].set(s.astype(f.dtype))
+    return jax.tree_util.tree_map_with_path(put, caches, state)
+
+
 class ServeSession:
     """Fixed-slot continuous batching over a single shared KV cache.
 
@@ -207,7 +346,9 @@ class ServeSession:
                  max_len: int, rt: RuntimeCfg = DEFAULT_RT,
                  temperature: float = 0.0, eos_id: int = -1, seed: int = 0,
                  policy=None, auto_backend: Optional[str] = None,
-                 verbose_policy: bool = False, telemetry=None):
+                 verbose_policy: bool = False, telemetry=None,
+                 paged: bool = False, page_size: int = 16,
+                 pages: Optional[int] = None):
         if policy == "auto":
             # paper-§9.2 resolution at session construction: the dominant
             # decode GEMM is (slots, d_model, d_ff); decode is
@@ -237,17 +378,44 @@ class ServeSession:
         self.eos_id = eos_id
         self.temperature = temperature
         self.slots: List[Optional[Request]] = [None] * batch_slots
-        self.caches = init_cache(cfg, batch_slots, max_len)
+        self._pat = cfg.superlayer_pattern
+        self.paged = bool(paged)
+        # The ambient default policy/backend is resolved at trace time by
+        # dense() whenever rt.policy is unset, so it must be part of the
+        # cache key — a --backend sweep flips it between sessions. Page
+        # geometry is part of the key too: a different --page-size changes
+        # the cache layout the step was traced for.
+        ambient = ex.get_default_policy()
+        if self.paged:
+            if max_len % page_size:
+                raise ValueError(f"max_len={max_len} must be a multiple of "
+                                 f"page_size={page_size}")
+            # register the paged-decode kernel backend (telemetry naming)
+            from repro.kernels import paged_attention  # noqa: F401
+            mp = max_len // page_size
+            if pages is None:
+                pages = batch_slots * mp      # dense-equivalent capacity
+            self.page_size, self.pages = int(page_size), int(pages)
+            self.pager = paging.PageAllocator(
+                self.pages, self.page_size, mp, batch_slots,
+                state_block_tokens=paging.state_block_tokens(cfg))
+            self.caches = init_paged_cache(cfg, batch_slots, max_len,
+                                           self.page_size, self.pages)
+            self._page_map = jnp.asarray(self.pager.page_map())
+            self.step_fn = _cached_jit(
+                "serve_paged",
+                lambda: make_paged_serve_step(cfg, rt, temperature),
+                cfg, rt, temperature, ambient, self.page_size, self.pages)
+        else:
+            self.page_size, self.pages = 0, 0
+            self.pager = None
+            self.caches = init_cache(cfg, batch_slots, max_len)
+            self.step_fn = _cached_jit(
+                "serve", lambda: make_serve_step(cfg, rt, temperature),
+                cfg, rt, temperature, ambient)
         # next write position per slot (slot-local: every request starts
         # at position 0 regardless of when it was admitted)
         self.slot_pos = np.zeros((batch_slots,), np.int32)
-        # The ambient default policy/backend is resolved at trace time by
-        # dense() whenever rt.policy is unset, so it must be part of the
-        # cache key — a --backend sweep flips it between sessions.
-        ambient = ex.get_default_policy()
-        self.step_fn = _cached_jit(
-            "serve", lambda: make_serve_step(cfg, rt, temperature),
-            cfg, rt, temperature, ambient)
         self.prefill_fn = _cached_jit(
             "prefill", lambda: make_prefill_step(cfg, rt), cfg, rt, ambient)
         self.rng = jax.random.PRNGKey(seed)
@@ -282,6 +450,28 @@ class ServeSession:
     def free_slots(self) -> int:
         return sum(s is None for s in self.slots)
 
+    def can_admit(self, req: Request) -> bool:
+        """Admission headroom: a free slot AND (paged) enough free pages
+        for the prompt plus its first decode write. The dense path is
+        exactly ``has_free_slot`` — slots ARE the capacity unit there."""
+        if not self.has_free_slot():
+            return False
+        if not self.paged:
+            return True
+        return self.pager.can_admit_tokens(len(req.prompt) + 1)
+
+    def _phys_padded(self, page_ids: List[int]) -> jax.Array:
+        """(max_pages,) int32 scatter vector: the slot's physical pages,
+        padded with the trash-page index (fixed shape → one jitted trace)."""
+        mp = self.pager.max_pages_per_slot
+        trash = self.pages                        # pool row past the last page
+        out = np.full((mp,), trash, np.int32)
+        out[:len(page_ids)] = page_ids
+        return jnp.asarray(out)
+
+    def _sync_page_map(self) -> None:
+        self._page_map = jnp.asarray(self.pager.page_map())
+
     def admit(self, req: Request) -> int:
         """Bulk-prefill ``req`` into a free slot and sample its first
         output token from the prefill logits. Active slots do not step —
@@ -293,6 +483,11 @@ class ServeSession:
         lp = len(req.prompt)
         if not 0 < lp < self.max_len:
             raise ValueError(f"prompt length {lp} not in [1, {self.max_len})")
+        if self.paged:
+            # reserve pages BEFORE the prefill: lp prompt positions plus
+            # the first decode write at position lp. Raises PagesExhausted
+            # (admission refused) — callers gate on can_admit() first.
+            page_ids = self.pager.alloc_slot(slot, lp + 1)
         prompt = jnp.asarray(np.asarray(req.prompt, np.int32))[None, :]
         t0 = time.perf_counter()
         with self._policy_scope():
@@ -304,7 +499,15 @@ class ServeSession:
                 precision=self.cfg.precision, **self._policy_tag(),
                 wall_s=time.perf_counter() - t0,
                 tenant=req.tenant or "", meta={"uid": req.uid, "slot": slot})
-        self.caches = _write_slot_cache(self.caches, pcaches, slot)
+        if self.paged:
+            self.caches = _paged_write_prompt(
+                self._pat, self.caches, pcaches, slot,
+                self._phys_padded(page_ids))
+            self._sync_page_map()
+            self.pager.record(self.tracer, phase="admit", slot=slot,
+                              tenant=req.tenant or "", uid=req.uid)
+        else:
+            self.caches = _write_slot_cache(self.caches, pcaches, slot)
         if self.temperature > 0:
             self.rng, sub = jax.random.split(self.rng)
             tok = int(jax.random.categorical(
@@ -322,7 +525,15 @@ class ServeSession:
     def free_slot(self, slot: int):
         self.slots[slot] = None
         self.slot_pos[slot] = 0
-        self.caches = _clear_slot_cache(self.caches, slot)
+        if self.paged:
+            released = self.pager.free_slot(slot)
+            # scrub the released pages BEFORE the free list hands them out
+            self.caches = _paged_clear_slot(self._pat, self.caches, slot,
+                                            self._phys_padded(released))
+            self._sync_page_map()
+            self.pager.record(self.tracer, phase="free", slot=slot)
+        else:
+            self.caches = _clear_slot_cache(self.caches, slot)
         self.tokens = self.tokens.at[slot, 0].set(0)
 
     # -- live cache handoff (tenant migration) ------------------------------
@@ -337,13 +548,47 @@ class ServeSession:
             raise ValueError(f"slot {slot} is empty")
         # Materialize the slices BEFORE _clear_slot_cache donates the
         # session buffers: these are fresh arrays, not views.
-        state = jax.tree_util.tree_map(lambda f: f[:, slot], self.caches)
-        out = SlotExport(request=req, caches=state,
-                         pos=int(self.slot_pos[slot]),
-                         token=int(self.tokens[slot, 0]))
+        if self.paged:
+            page_ids = self.pager.slot_pages(slot)
+            state = _paged_take_slot(self._pat, self.caches, slot, page_ids)
+            out = SlotExport(request=req, caches=state,
+                             pos=int(self.slot_pos[slot]),
+                             token=int(self.tokens[slot, 0]),
+                             pages=len(page_ids), page_size=self.page_size)
+            if self.tracer is not None:
+                self.pager.record(self.tracer, phase="export", slot=slot,
+                                  tenant=req.tenant or "",
+                                  pages_moved=len(page_ids),
+                                  handoff_bytes=export_nbytes(out))
+        else:
+            state = jax.tree_util.tree_map(lambda f: f[:, slot], self.caches)
+            out = SlotExport(request=req, caches=state,
+                             pos=int(self.slot_pos[slot]),
+                             token=int(self.tokens[slot, 0]))
         jax.block_until_ready(state)
         self.free_slot(slot)
         return out
+
+    def handoff_pages(self, slot: int) -> int:
+        """Pages a migration of ``slot`` would move (0 on dense sessions —
+        dense handoffs move the whole max_len slice regardless)."""
+        return len(self.pager.slot_pages(slot)) if self.paged else 0
+
+    def can_accept_pages(self, n_pages: int, page_size: int) -> bool:
+        """Import-side headroom check *before* the exporter detaches the
+        slot: free slot, and on paged sessions matching page geometry plus
+        enough free pages for the ``n_pages`` the handoff would move."""
+        if not self.has_free_slot():
+            return False
+        if not self.paged:
+            return True
+        return (page_size == self.page_size
+                and n_pages <= self.pager.max_pages_per_slot
+                and self.pager.can_alloc(n_pages))
+
+    def can_accept_handoff(self, export: SlotExport) -> bool:
+        """Would :meth:`import_slot` succeed right now?"""
+        return self.can_accept_pages(export.pages, export.page_size)
 
     def import_slot(self, export: SlotExport) -> int:
         """Resume an exported in-flight request in a free slot of THIS
@@ -352,16 +597,57 @@ class ServeSession:
         slot = next((i for i, s in enumerate(self.slots) if s is None), None)
         if slot is None:
             raise RuntimeError("import_slot() with no free slot")
-        ours = [f.shape[:1] + f.shape[2:]
-                for f in jax.tree_util.tree_leaves(self.caches)]
-        theirs = [s.shape
-                  for s in jax.tree_util.tree_leaves(export.caches)]
-        if ours != theirs:
+        if self.paged != bool(export.pages or export.page_size):
             raise ValueError(
-                "cache layout mismatch: the exporting session's slot state "
-                "does not fit this session (same cfg and max_len required "
-                "for a live handoff)")
-        self.caches = _restore_slot_cache(self.caches, export.caches, slot)
+                "cache layout mismatch: paged and dense sessions cannot "
+                "hand off slots to each other")
+        if self.paged:
+            if export.page_size != self.page_size:
+                raise ValueError(
+                    f"page_size mismatch: export {export.page_size} vs "
+                    f"session {self.page_size}")
+            # Both sides paged: paged leaves compare trailing (page
+            # geometry) dims — the export carries pages-in-use, not the
+            # full pool — dense state leaves compare whole slot slices.
+            paged_blocks = _paged_blocks(self._pat)
+            ours: List[tuple] = []
+            theirs: List[tuple] = []
+
+            def collect(path, f, s):
+                ours.append(f.shape[:1] + f.shape[2:])
+                theirs.append(s.shape[:1] + s.shape[2:]
+                              if _is_paged_leaf(path, paged_blocks)
+                              else s.shape)
+                return f
+            jax.tree_util.tree_map_with_path(collect, self.caches,
+                                             export.caches)
+            if ours != theirs:
+                raise ValueError(
+                    "cache layout mismatch: the exporting session's slot "
+                    "state does not fit this session (same cfg, max_len "
+                    "and page_size required for a live handoff)")
+            # May raise PagesExhausted — callers gate on
+            # can_accept_handoff() first.
+            page_ids = self.pager.import_slot(slot, export.pages,
+                                              export.pos + 1)
+            self.caches = _paged_put_slot(self._pat, self.caches,
+                                          export.caches, slot, page_ids)
+            self._sync_page_map()
+            self.pager.record(self.tracer, phase="import", slot=slot,
+                              tenant=export.request.tenant or "",
+                              pages_moved=export.pages)
+        else:
+            ours = [f.shape[:1] + f.shape[2:]
+                    for f in jax.tree_util.tree_leaves(self.caches)]
+            theirs = [s.shape
+                      for s in jax.tree_util.tree_leaves(export.caches)]
+            if ours != theirs:
+                raise ValueError(
+                    "cache layout mismatch: the exporting session's slot "
+                    "state does not fit this session (same cfg and max_len "
+                    "required for a live handoff)")
+            self.caches = _restore_slot_cache(self.caches, export.caches,
+                                              slot)
         self.slots[slot] = export.request
         self.slot_pos[slot] = export.pos
         self.tokens = self.tokens.at[slot, 0].set(export.token)
@@ -372,12 +658,42 @@ class ServeSession:
         the requests that completed this step."""
         if self.n_active == 0:
             return []
+        oom_done: List[Request] = []
+        if self.paged:
+            # lazy page append: make sure every active slot has a page
+            # for the position this step writes. Pool exhaustion finishes
+            # the request truncated (refused, never crashed).
+            for i, req in enumerate(self.slots):
+                if req is None:
+                    continue
+                need = int(self.slot_pos[i]) + 1
+                if self.pager.pages_for(need) > \
+                        len(self.pager.slot_pages(i)):
+                    try:
+                        self.pager.extend_slot(i, need)
+                        self._sync_page_map()
+                    except paging.PagesExhausted:
+                        self.pager.record(self.tracer, phase="page_oom",
+                                          slot=i, tenant=req.tenant or "",
+                                          uid=req.uid)
+                        req.done = True
+                        req.finish_t = time.perf_counter()
+                        self.completed.append(req)
+                        self.free_slot(i)
+                        oom_done.append(req)
+            if self.n_active == 0:
+                return oom_done
         self.rng, sub = jax.random.split(self.rng)
         t0 = time.perf_counter()
         with self._policy_scope():
-            nxt, _, self.caches = self.step_fn(
-                self.params, self.tokens, self.caches,
-                jnp.asarray(self.slot_pos), sub)
+            if self.paged:
+                nxt, _, self.caches = self.step_fn(
+                    self.params, self.tokens, self.caches,
+                    jnp.asarray(self.slot_pos), self._page_map, sub)
+            else:
+                nxt, _, self.caches = self.step_fn(
+                    self.params, self.tokens, self.caches,
+                    jnp.asarray(self.slot_pos), sub)
         nxt_np = np.asarray(nxt[:, 0])       # forces the step to complete
         if self.tracer is not None:
             self.tracer.record(
@@ -387,7 +703,7 @@ class ServeSession:
                 wall_s=time.perf_counter() - t0,
                 meta={"n_active": self.n_active})
         self.tokens = nxt
-        done = []
+        done = list(oom_done)
         for i, req in enumerate(self.slots):
             if req is None:
                 continue
@@ -396,6 +712,10 @@ class ServeSession:
             req.out.append(tok)
             if self._maybe_finish(i, tok):
                 done.append(req)
+            elif self.paged:
+                # utilization accounting: positions written so far plus
+                # the pending next write
+                self.pager.note_tokens(i, int(self.slot_pos[i]) + 1)
         return done
 
     def _maybe_finish(self, slot: int, tok: int) -> bool:
@@ -415,8 +735,19 @@ class ServeSession:
         self.queue.append(req)
 
     def _admit_from_queue(self):
-        while self.queue and self.has_free_slot():
+        while self.queue and self.can_admit(self.queue[0]):
             self.admit(self.queue.pop(0))
+        if (self.paged and self.queue and self.n_active == 0
+                and self.pager.pages_in_use == 0
+                and not self.can_admit(self.queue[0])):
+            # nothing running, nothing allocated, and the head request
+            # still doesn't fit: it never will — surface the config error
+            # instead of spinning forever in run().
+            req = self.queue[0]
+            raise paging.PagesExhausted(
+                f"request uid={req.uid} needs "
+                f"{self.pager.pages_for(len(req.prompt) + 1)} pages but the "
+                f"pool only has {self.pages}")
 
     def step(self):
         """Admit what fits, then one decode step for all active slots."""

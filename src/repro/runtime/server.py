@@ -52,7 +52,7 @@ from repro.runtime import telemetry
 from repro.runtime.scheduler import (
     ADMISSION_POLICIES, QuotaPolicy, SchedulerReport, StreamScheduler,
     Tenant, TenantReport, build_tenant_report, request_cost)
-from repro.runtime.serve_loop import Request, ServeSession
+from repro.runtime.serve_loop import Request, ServeSession, export_nbytes
 
 PLACEMENTS = ("packed", "spread", "load_aware")
 
@@ -132,6 +132,12 @@ class PartitionSpec:
     admission: str = "fair_quantum"
     quota: Optional[str] = None      # None | "static" | "adaptive"
     batch_slots: Optional[int] = None
+    # Paged-cache overrides (None = inherit the spec-wide setting). NOTE:
+    # migration can only hand slots between partitions with the SAME cache
+    # layout (paged-ness and page_size).
+    paged: Optional[bool] = None
+    page_size: Optional[int] = None
+    pages: Optional[int] = None
 
     def __post_init__(self):
         if self.admission not in ADMISSION_POLICIES:
@@ -142,6 +148,10 @@ class PartitionSpec:
                              "(None, 'static', 'adaptive')")
         if self.batch_slots is not None and self.batch_slots <= 0:
             raise ValueError("batch_slots must be positive")
+        if self.page_size is not None and self.page_size <= 0:
+            raise ValueError("page_size must be positive")
+        if self.pages is not None and self.pages <= 0:
+            raise ValueError("pages must be positive")
 
     def to_dict(self) -> Dict[str, Any]:
         d = dataclasses.asdict(self)
@@ -202,6 +212,12 @@ class ServingSpec:
     migration: MigrationSpec = dataclasses.field(
         default_factory=MigrationSpec)
     tenants: Tuple[TenantSpec, ...] = ()
+    # Paged serving cache (core/paging.py): per-slot page tables over a
+    # shared pool instead of dense (slots × max_len) buffers. ``pages``
+    # None sizes the pool to dense-equivalent capacity.
+    paged: bool = False
+    page_size: int = 16
+    pages: Optional[int] = None
 
     def __post_init__(self):
         if not self.partitions:
@@ -211,6 +227,16 @@ class ServingSpec:
                              f"{PLACEMENTS}")
         if self.batch_slots <= 0 or self.max_len <= 1:
             raise ValueError("batch_slots must be positive, max_len > 1")
+        if self.page_size <= 0:
+            raise ValueError("page_size must be positive")
+        if self.pages is not None and self.pages <= 0:
+            raise ValueError("pages must be positive")
+        for p in (self,) + self.partitions:
+            on = self.paged if p is self or p.paged is None else p.paged
+            ps = p.page_size if p.page_size is not None else self.page_size
+            if on and self.max_len % ps:
+                raise ValueError(f"max_len={self.max_len} must be a "
+                                 f"multiple of page_size={ps}")
         ids = [t.id for t in self.tenants]
         if len(set(ids)) != len(ids):
             raise ValueError("duplicate tenant ids in spec")
@@ -235,6 +261,9 @@ class ServingSpec:
             "policy": _policy_str(self.policy),
             "migration": self.migration.to_dict(),
             "tenants": [t.to_dict() for t in self.tenants],
+            "paged": self.paged,
+            "page_size": self.page_size,
+            "pages": self.pages,
         }
 
     @classmethod
@@ -433,11 +462,16 @@ class ServingRuntime:
                 and pol.sparsity == "sparse24") else params
             tr = telemetry.Tracer(capacity=tracer_capacity,
                                   partition=part.index)
+            p_paged = spec.paged if pspec.paged is None else pspec.paged
+            p_psize = pspec.page_size if pspec.page_size is not None \
+                else spec.page_size
+            p_pages = pspec.pages if pspec.pages is not None else spec.pages
             sess = ServeSession(
                 self._place_params(use_params, part), cfg,
                 batch_slots=pspec.batch_slots or spec.batch_slots,
                 max_len=spec.max_len, temperature=spec.temperature,
-                seed=spec.seed, policy=pol, telemetry=tr, **kw)
+                seed=spec.seed, policy=pol, telemetry=tr,
+                paged=p_paged, page_size=p_psize, pages=p_pages, **kw)
             sched = StreamScheduler(
                 sess, admission=pspec.admission, tracer=tr,
                 quota=self._quota_for(quota, pspec, i))
@@ -767,7 +801,10 @@ class ServingRuntime:
         for slot, req in enumerate(src_sess.slots):
             if req is None or req.tenant != tid:
                 continue
-            if not dst_sess.has_free_slot():
+            # admission-by-headroom: on paged targets this checks free
+            # PAGES for the slot's pages-in-use, not just a free slot
+            if not dst_sess.can_accept_pages(src_sess.handoff_pages(slot),
+                                             src_sess.page_size):
                 break                 # keep decoding on src; retry next step
             export = src_sess.export_slot(slot)
             dst_slot = dst_sess.import_slot(export)
@@ -778,7 +815,8 @@ class ServingRuntime:
                 tr.record_migrate(tid, src=src, dst=dst, phase="handoff",
                                   step=self.step_count, uid=req.uid,
                                   src_slot=slot, dst_slot=dst_slot,
-                                  pos=export.pos)
+                                  pos=export.pos, pages=export.pages,
+                                  handoff_bytes=export_nbytes(export))
         if src_t.queue or src_t.active:
             return
         # source fully drained: fold the tenant's history onto the target
