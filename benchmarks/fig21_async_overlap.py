@@ -1,0 +1,319 @@
+"""Fig 21 — scheduled-online sparse+dense lane overlap vs serialized.
+
+The paper characterizes ACE concurrency *offline* (fig4/fig13: contention
+is shape- and pairing-dependent); AsyncSparse shows sparse matmul winning
+specifically on asynchronous execution. This figure closes the loop
+*online*: the OverlapPlanner pairs sparse24 with dense work from the
+Tracer's measured per-shape latency EMAs and dispatches the pair through
+ExecutionLanes before joining either side.
+
+Two arms at the fig13 contention shape (k=512):
+
+* **contention** — the raw kernel pairing decision: one sparse24-packed
+  (fp8 values) decode-batch GEMM against a menu of dense bf16 GEMMs of
+  varying M. The planner measures all of them online and pairs the
+  sparse op with the dense op of *closest* measured latency (a lopsided
+  pair would just serialize behind its slow member); the chosen pair is
+  then co-dispatched and its per-op dispatch→ready overlap reported.
+  On CPU the XLA executions themselves serialize, so the wall win here
+  is reported, not asserted — the asserted win is the serving arm's.
+* **serving** — four heterogeneous partitions (2x fp8:sparse24 beside
+  2x bf16:dense) drained over the same tenant workload with
+  ``ServingSpec(overlap=...)`` on vs off: with lanes, one partition's
+  host work (admission/prefill dispatch, token accounting) hides under
+  another's in-flight decode. The two runtimes step in lockstep
+  alternation (paired per-step walls — separate drains are dominated by
+  machine drift at this scale). Tokens are asserted identical;
+  ``tok_per_step`` is wall-normalized (tokens per serialized-arm mean
+  step wall), so the overlap arm exceeds the serialized arm exactly when
+  its wall-clock throughput wins.
+
+Writes ``BENCH_fig21.json`` (the second perf-trajectory point after
+``BENCH_fig20.json``); CI asserts overlap >= serialized tok/step on it.
+"""
+import json
+import time
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_reduced
+from repro.core import concurrency as cc
+from repro.core import execution as ex
+from repro.core import sparsity as sp
+from repro.core.characterization import Record
+from repro.kernels import registry
+from repro.models import init_params
+from repro.models.layers import RuntimeCfg
+from repro.runtime import telemetry
+from repro.runtime.serve_loop import Request
+from repro.runtime.server import (
+    MigrationSpec, PartitionSpec, ServingRuntime, ServingSpec)
+
+RT = RuntimeCfg(ssm_chunk=16)
+MAX_LEN = 64
+N_REQ = 12
+PROMPT_LEN = 4
+MAX_NEW = 8
+SLOTS = 2
+TENANTS = ("t0", "t1", "t2", "t3")
+# fig13 contention shape: k=512 decode-regime GEMMs. The sparse24 op runs
+# at decode batch M=64; the dense menu spans M so the planner has a real
+# choice — only one dense M lands within max_imbalance of the sparse op.
+SPARSE_M, K, N = 64, 512, 512
+DENSE_MS = (256, 2048, 8192)
+ROUNDS = 4
+REPS = 3
+
+BENCH_PATH = Path(__file__).resolve().parent.parent / "BENCH_fig21.json"
+
+_MODEL = {}
+
+
+def _model():
+    if not _MODEL:
+        cfg = get_reduced("llama3-8b")
+        _MODEL["cfg"] = cfg
+        _MODEL["params"] = init_params(jax.random.PRNGKey(0), cfg)
+    return _MODEL["cfg"], _MODEL["params"]
+
+
+# ---------------------------------------------------------------------------
+# Arm 1: kernel-level pairing at the contention shape
+# ---------------------------------------------------------------------------
+
+def _contention():
+    be = registry.get_backend("jnp")
+    w = jax.random.normal(jax.random.PRNGKey(1), (K, N), jnp.float32) \
+        .astype(jnp.bfloat16)
+    vals, meta = sp.pack_24(sp.prune_24(w))
+    vals8 = vals.astype(jnp.float8_e4m3fn)
+
+    # jit with operands as *arguments* — closing over the arrays would let
+    # XLA constant-fold the whole GEMM out of the timed region
+    sp_jit = jax.jit(lambda a, v, m: be.sparse24(a, v, m,
+                                                 out_dtype=jnp.float32))
+    dn_jit = jax.jit(lambda a, b: be.dense(a, b, out_dtype=jnp.float32))
+
+    xs = jax.random.normal(jax.random.PRNGKey(0), (SPARSE_M, K),
+                           jnp.float32).astype(jnp.bfloat16)
+    thunks = {0: (lambda: sp_jit(xs, vals8, meta))}
+    shapes = {0: (SPARSE_M, K, N, "fp8_sparse24")}
+    sparsities = {0: "sparse24"}
+    for i, m in enumerate(DENSE_MS, start=1):
+        xd = jax.random.normal(jax.random.PRNGKey(i), (m, K),
+                               jnp.float32).astype(jnp.bfloat16)
+        thunks[i] = (lambda xd=xd: dn_jit(xd, w))
+        shapes[i] = (m, K, N, "bf16")
+        sparsities[i] = "dense"
+
+    tracer = telemetry.Tracer()
+    # online measurement: run every op serially a few times (first round
+    # doubles as jit warmup), feeding the per-shape wall EMAs the planner
+    # pairs from
+    for r in range(4):
+        for idx, fn in thunks.items():
+            t0 = time.perf_counter()
+            cc._block(fn())
+            if r:  # skip the compile round
+                tracer.record_matmul(*shapes[idx][:3],
+                                     precision=shapes[idx][3],
+                                     backend="jnp",
+                                     wall_s=time.perf_counter() - t0)
+
+    planner = ex.OverlapPlanner(pair_homogeneous=False)
+    plan = planner.plan([
+        planner.candidate(i, sparsity=sparsities[i], shape=shapes[i],
+                          tracer=tracer)
+        for i in sorted(thunks)])
+    pair = next((g for g in plan.groups if 0 in g), None)
+    partner = next((i for i in pair if i != 0), None) if pair else None
+    emas = tracer.shape_latency_ema()
+
+    serial_wall = 0.0
+    overlap_wall = 0.0
+    ov = {"groups": 0, "mean_efficiency": 0.0}
+    if pair:
+        lanes = {i: cc.ExecutionLane(f"k{i}", index=i, tracer=tracer)
+                 for i in pair}
+
+        def serial_pass():
+            t0 = time.perf_counter()
+            for _ in range(ROUNDS):
+                for idx in pair:
+                    lanes[idx].dispatch(thunks[idx]).join()
+            return time.perf_counter() - t0
+
+        def overlap_pass(gid0):
+            t0 = time.perf_counter()
+            for r in range(ROUNDS):
+                handles = [(idx, lanes[idx].dispatch(
+                    thunks[idx], overlap_group=gid0 + r)) for idx in pair]
+                for idx, h in handles:
+                    h.join()
+                    m_, k_, n_, prec = shapes[idx]
+                    tracer.record("matmul", m=m_, k=k_, n=n_,
+                                  precision=prec, backend="jnp",
+                                  lane=lanes[idx].name,
+                                  overlap_group=gid0 + r,
+                                  wall_s=h.dispatch_to_ready_s)
+            return time.perf_counter() - t0
+
+        serial_wall = min(serial_pass() for _ in range(REPS))
+        overlap_wall = min(overlap_pass(1000 * rep) for rep in range(REPS))
+        ov = tracer.overlap_summary()
+
+    return {
+        "sparse_m": SPARSE_M, "k": K, "n": N, "dense_menu_m": list(DENSE_MS),
+        "rounds": ROUNDS,
+        "measured_ema_us": {
+            f"{sh[3]}:m={sh[0]}": round(emas[sh] * 1e6, 1)
+            for sh in shapes.values() if sh in emas},
+        "planner_paired": int(pair is not None),
+        "paired_dense_m": shapes[partner][0] if partner else None,
+        "serialized_wall_us": round(serial_wall * 1e6, 1),
+        "overlap_wall_us": round(overlap_wall * 1e6, 1),
+        # reported, not asserted: single-process CPU XLA serializes the two
+        # device computations, so co-dispatch of a kernel pair is ~1.0x
+        # here; the asserted overlap win is the serving arm's tok_per_step
+        "speedup": round(serial_wall / max(overlap_wall, 1e-12), 3),
+        "group_mean_efficiency": round(ov["mean_efficiency"], 3),
+        "groups": ov["groups"],
+    }
+
+
+# ---------------------------------------------------------------------------
+# Arm 2: serving drain, overlap on vs off
+# ---------------------------------------------------------------------------
+
+def _requests(cfg):
+    rng = np.random.default_rng(0)
+    return [Request(uid=j,
+                    prompt=rng.integers(0, cfg.vocab_size, PROMPT_LEN)
+                    .astype(np.int32), max_new=MAX_NEW)
+            for j in range(N_REQ)]
+
+
+def _spec(overlap):
+    # two sparse24 + two dense partitions: the planner forms two
+    # sparse/dense pairs, and all four dispatch before any join
+    return ServingSpec(
+        partitions=(PartitionSpec(policy="fp8:sparse24:jnp"),
+                    PartitionSpec(policy="bf16:dense:jnp"),
+                    PartitionSpec(policy="fp8:sparse24:jnp"),
+                    PartitionSpec(policy="bf16:dense:jnp")),
+        placement="spread", batch_slots=SLOTS, max_len=MAX_LEN,
+        migration=MigrationSpec(), overlap=overlap)
+
+
+def _build(overlap):
+    cfg, params = _model()
+    rt = ServingRuntime(params, cfg, _spec(overlap), rt=RT)
+    for t in TENANTS:
+        rt.add_tenant(t)
+    for j, req in enumerate(_requests(cfg)):
+        rt.submit(TENANTS[j % len(TENANTS)], req)
+    return rt
+
+
+def _paired_drive():
+    """Drain a serialized and an overlap runtime in step-by-step
+    lockstep-alternation, accumulating each arm's per-step wall.
+
+    Separate back-to-back drains are dominated by machine drift (CPU
+    frequency, allocator state) at this scale; alternating single steps
+    exposes both arms to the same instantaneous conditions so the
+    accumulated walls are a paired comparison."""
+    rts = {"serialized": _build(False), "overlap": _build(True)}
+    walls = {k: 0.0 for k in rts}
+    done = {k: [] for k in rts}
+    while any(rt.pending() or rt.n_active for rt in rts.values()):
+        for name, rt in rts.items():
+            if rt.pending() or rt.n_active:
+                t0 = time.perf_counter()
+                done[name].extend(rt.step())
+                walls[name] += time.perf_counter() - t0
+    toks = {name: {r.uid: list(r.out) for r in ds}
+            for name, ds in done.items()}
+    steps = {name: rt.step_count for name, rt in rts.items()}
+    return toks, steps, walls, rts
+
+
+def run():
+    contention = _contention()
+
+    # warm the shared jit cache (all partitions' prefill+decode traces)
+    # outside every timed step
+    _build(True).drain()
+    arms = {name: {"steps": 0, "wall_s": 0.0}
+            for name in ("serialized", "overlap")}
+    toks = {}
+    for _ in range(REPS):
+        tk, steps, walls, rts = _paired_drive()
+        for name, arm in arms.items():
+            arm["steps"] = steps[name]
+            arm["wall_s"] += walls[name]  # aggregate over paired reps
+            arm["rt"] = rts[name]
+            toks.setdefault(name, tk[name])
+            assert toks[name] == tk[name], f"{name} arm is not deterministic"
+
+    assert toks["serialized"] == toks["overlap"], \
+        "greedy tokens diverged between serialized and overlap arms"
+    tokens = sum(len(v) for v in toks["serialized"].values())
+
+    ser, ovl = arms["serialized"], arms["overlap"]
+    # wall-normalized tokens/step: tokens per serialized-arm mean step
+    # wall. The serialized arm's value is its literal tokens/step; the
+    # overlap arm exceeds it exactly when its wall-clock throughput wins
+    # (steps are lockstep-identical across arms by construction).
+    base_step_wall = ser["wall_s"] / max(ser["steps"] * REPS, 1)
+    for arm in (ser, ovl):
+        arm["tok_per_step"] = \
+            tokens * REPS * base_step_wall / arm["wall_s"]
+
+    merged = ovl["rt"].merged_tracer()
+    lane_evs = [e for e in merged.events("decode")
+                if e.lane and e.overlap_group >= 0]
+    ov = merged.overlap_summary()
+    assert lane_evs, "overlap arm recorded no lane-tagged decode events"
+    assert ov["groups"] >= 1, "overlap arm formed no overlap groups"
+
+    summary = {
+        "figure": "fig21_async_overlap",
+        "contention": contention,
+        "serialized": {"steps": ser["steps"], "tokens": tokens,
+                       "wall_s": round(ser["wall_s"], 4),
+                       "tok_per_step": round(ser["tok_per_step"], 4)},
+        "overlap": {"steps": ovl["steps"], "tokens": tokens,
+                    "wall_s": round(ovl["wall_s"], 4),
+                    "tok_per_step": round(ovl["tok_per_step"], 4),
+                    "overlap_groups": ov["groups"],
+                    "lane_decode_events": len(lane_evs),
+                    "group_mean_speedup": round(ov["mean_speedup"], 3)},
+        "serving_speedup": round(ser["wall_s"] / max(ovl["wall_s"], 1e-12),
+                                 3),
+        "tokens_equal": 1,
+    }
+    BENCH_PATH.write_text(json.dumps(summary, indent=2) + "\n")
+
+    out = [
+        Record(name="fig21/contention/pairing",
+               us_per_call=contention["overlap_wall_us"],
+               derived={k: v for k, v in contention.items()
+                        if k not in ("overlap_wall_us",)}),
+    ]
+    for name in ("serialized", "overlap"):
+        arm = arms[name]
+        out.append(Record(
+            name=f"fig21/serving/{name}",
+            us_per_call=arm["wall_s"] * 1e6,
+            derived={"steps": arm["steps"], "tokens": tokens,
+                     "tok_per_step": round(arm["tok_per_step"], 4)}))
+    out.append(Record(
+        name="fig21/equality", us_per_call=0.0,
+        derived={"tokens_equal": 1, "overlap_groups": ov["groups"],
+                 "lane_decode_events": len(lane_evs),
+                 "serving_speedup": summary["serving_speedup"]}))
+    return out

@@ -7,7 +7,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import concurrency as cc
-from repro.core.characterization import PRECISIONS, Record, _mk, _matmul_fn
+from repro.core.characterization import PRECISIONS, _mk, _matmul_fn
 
 
 def run():
@@ -22,10 +22,11 @@ def run():
                 a = _mk((S, S), dtype, key=i)
                 return lambda: fn(a, b)
             rep = cc.characterize_streams(mk, ns, mode="async")
-            out.append(Record(
-                name=f"fig4/{prec}/streams={ns}",
-                us_per_call=rep.wall_s * 1e6,
-                derived={"speedup": round(rep.speedup, 3),
-                         "overlap_eff": round(rep.overlap_efficiency, 3),
-                         "streams": ns, "precision": prec}))
+            # one shared schema: StreamReport.to_record carries the full
+            # report (speedup/overlap_efficiency/fairness/cv/per_stream_s
+            # + the legacy_timing note) through the same Record dict that
+            # autotune.dump_records/load_records and
+            # AutotuneStore.add_records consume
+            out.append(rep.to_record(f"fig4/{prec}/streams={ns}",
+                                     streams=ns, precision=prec))
     return out

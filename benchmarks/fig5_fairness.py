@@ -8,7 +8,7 @@ reads 0.0) — ``fairness_raw`` keeps the unbounded diagnostic value and
 import jax
 
 from repro.core import concurrency as cc
-from repro.core.characterization import PRECISIONS, Record, _mk, _matmul_fn
+from repro.core.characterization import PRECISIONS, _mk, _matmul_fn
 
 
 def run():
@@ -23,14 +23,10 @@ def run():
                 a = _mk((S, S), dtype, key=i)
                 return lambda: fn(a, b)
             rep = cc.characterize_streams(mk, ns, mode="async")
-            out.append(Record(
-                name=f"fig5/{prec}/streams={ns}",
-                us_per_call=rep.wall_s * 1e6,
-                derived={"fairness": round(rep.fairness, 4),
-                         "fairness_raw": round(
-                             cc.fairness_raw(rep.per_stream_s), 4),
-                         "fairness_minmax": round(rep.fairness_min_max, 4),
-                         "cv": round(rep.cv, 4),
-                         "overlap_eff": round(rep.overlap_efficiency, 4),
-                         "streams": ns, "precision": prec}))
+            # shared StreamReport schema (see fig4); fairness_raw and the
+            # §7.2 min/max variant ride along as extra derived keys
+            out.append(rep.to_record(
+                f"fig5/{prec}/streams={ns}",
+                fairness_raw=round(cc.fairness_raw(rep.per_stream_s), 4),
+                streams=ns, precision=prec))
     return out

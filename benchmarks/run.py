@@ -38,6 +38,7 @@ MODULES = [
     "fig18_partitioned_serving",
     "fig19_migration",
     "fig20_paged_serving",
+    "fig21_async_overlap",
     "roofline_report",
 ]
 

@@ -69,12 +69,25 @@ class Sample:
 # Record serialization (shared by benchmarks/run.py --out)
 # ---------------------------------------------------------------------------
 
+def json_safe(v: Any) -> Any:
+    """Coerce one derived value to a JSON-serializable form: scalars pass
+    through, lists/tuples of scalars recurse (``StreamReport.per_stream_s``
+    survives a dump/load round trip), anything else stringifies."""
+    if isinstance(v, (int, float, str, bool, type(None))):
+        return v
+    if isinstance(v, (list, tuple)):
+        return [json_safe(x) for x in v]
+    return str(v)
+
+
 def record_to_dict(rec) -> Dict[str, Any]:
-    """``characterization.Record`` → plain dict (JSON-safe derived)."""
+    """``characterization.Record`` → plain dict (JSON-safe derived).
+
+    The one Record schema: ``StreamReport.to_record`` produces these,
+    ``dump_records``/``load_records`` persist them, and
+    :meth:`AutotuneStore.add_records` ingests them."""
     return {"name": rec.name, "us_per_call": float(rec.us_per_call),
-            "derived": {k: (v if isinstance(v, (int, float, str, bool,
-                                                type(None))) else str(v))
-                        for k, v in rec.derived.items()}}
+            "derived": {k: json_safe(v) for k, v in rec.derived.items()}}
 
 
 def dump_records(records: Sequence[Any], path: str) -> str:

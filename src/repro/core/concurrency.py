@@ -23,6 +23,7 @@ from __future__ import annotations
 import dataclasses
 import os
 import time
+import warnings
 from typing import Any, Callable, Dict, List, Optional, Sequence
 
 import jax
@@ -44,9 +45,20 @@ def detect_core_count(default: int = DEFAULT_N_CORES) -> int:
     env = os.environ.get("REPRO_N_CORES")
     if env:
         try:
-            return max(1, int(env))
+            val = int(env)
         except ValueError:
-            pass
+            warnings.warn(
+                f"REPRO_N_CORES={env!r} is not an integer; ignoring the "
+                f"override and falling back to detection/default",
+                RuntimeWarning, stacklevel=2)
+        else:
+            if val > 0:
+                return val
+            warnings.warn(
+                f"REPRO_N_CORES={env!r} is not a positive core count; "
+                f"ignoring the override and falling back to "
+                f"detection/default",
+                RuntimeWarning, stacklevel=2)
     try:
         devices = jax.devices()
     except Exception:  # noqa: BLE001 — no backend at all
@@ -142,13 +154,40 @@ class StreamReport:
     fairness: float
     fairness_min_max: float
     cv: float
+    # How per_stream_s was measured. "dispatch_to_ready" (the lane-handle
+    # clock: each stream's time runs from ITS OWN dispatch to its result
+    # being ready) is the only mode produced since the lane refactor.
+    timing: str = "dispatch_to_ready"
 
     def to_dict(self) -> Dict[str, Any]:
-        return dataclasses.asdict(self)
+        d = dataclasses.asdict(self)
+        for k, v in d.items():
+            if isinstance(v, float):
+                d[k] = round(v, 9)
+            elif isinstance(v, list):
+                d[k] = [round(x, 9) if isinstance(x, float) else x
+                        for x in v]
+        # keep numbers comparable across the timing change: pre-lane
+        # reports measured every stream from one global t0 (so a late
+        # stream's time included every earlier stream's completion wait)
+        d["legacy_timing"] = ("pre-lane per_stream_s ran from a global t0"
+                              " — not per-dispatch")
+        return d
+
+    def to_record(self, name: str, **extra: Any):
+        """Serialize as a :class:`repro.core.characterization.Record` —
+        the one schema fig4/fig5 CSVs, ``dump_records``/``load_records``
+        and ``AutotuneStore.add_records`` all consume. ``extra`` keys are
+        merged into ``derived`` (e.g. ``precision=...``, ``streams=...``)."""
+        from repro.core.characterization import Record
+        derived = dict(self.to_dict())
+        derived.update(extra)
+        return Record(name=name, us_per_call=self.wall_s * 1e6,
+                      derived=derived)
 
 
 # ---------------------------------------------------------------------------
-# Stream runners
+# Execution lanes (dispatch-and-join seam)
 # ---------------------------------------------------------------------------
 
 def _block(x):
@@ -156,26 +195,114 @@ def _block(x):
                  if hasattr(a, "block_until_ready") else a, x)
 
 
-def run_serial(thunks: Sequence[Callable[[], Any]]) -> List[float]:
+@dataclasses.dataclass
+class LaneHandle:
+    """A joinable in-flight dispatch.
+
+    ``result`` holds whatever the thunk returned — with JAX async dispatch
+    that's future-backed arrays already enqueued on the device, not yet
+    blocked on. ``join()`` blocks until ready and stamps ``ready_t``;
+    ``dispatch_to_ready_s`` is then the stream's own dispatch→ready time
+    (NOT measured from some global start, so it excludes other streams'
+    completion waits when dispatch outpaces execution)."""
+    lane: str
+    label: str
+    result: Any
+    dispatch_t: float
+    overlap_group: int = -1
+    ready_t: Optional[float] = None
+
+    def join(self) -> Any:
+        if self.ready_t is None:
+            _block(self.result)
+            self.ready_t = time.perf_counter()
+        return self.result
+
+    @property
+    def done(self) -> bool:
+        return self.ready_t is not None
+
+    @property
+    def dispatch_to_ready_s(self) -> float:
+        end = self.ready_t if self.ready_t is not None else time.perf_counter()
+        return max(0.0, end - self.dispatch_t)
+
+
+class ExecutionLane:
+    """A named async dispatch context — the ACE-queue analogue the rest of
+    the stack programs against.
+
+    ``dispatch(thunk)`` calls the thunk immediately (with JAX that enqueues
+    the computation through the runahead queue and returns future arrays)
+    and wraps the un-blocked result in a :class:`LaneHandle`. Callers join
+    handles when — and only when — they need the values on the host, which
+    is what lets two lanes' work genuinely overlap. A lane given a
+    ``tracer`` (duck-typed ``repro.runtime.telemetry.Tracer``) records one
+    ``dispatch`` event per dispatch so overlap decisions are attributable
+    after the fact."""
+
+    def __init__(self, name: str = "lane0", *, index: int = 0, tracer=None):
+        self.name = name
+        self.index = index
+        self.tracer = tracer
+        self.handles: List[LaneHandle] = []
+
+    def dispatch(self, thunk: Callable[[], Any], *, label: str = "",
+                 overlap_group: int = -1) -> LaneHandle:
+        t0 = time.perf_counter()
+        result = thunk()               # enqueued via JAX async dispatch
+        h = LaneHandle(lane=self.name,
+                       label=label or getattr(thunk, "__name__", "thunk"),
+                       result=result, dispatch_t=t0,
+                       overlap_group=overlap_group)
+        self.handles.append(h)
+        if self.tracer is not None:
+            self.tracer.record("dispatch", lane=self.name,
+                               overlap_group=overlap_group,
+                               meta={"label": h.label})
+        return h
+
+    def join_all(self) -> List[Any]:
+        return [h.join() for h in self.handles]
+
+    def reset(self) -> None:
+        self.handles.clear()
+
+    def __repr__(self) -> str:  # pragma: no cover - debugging nicety
+        return (f"ExecutionLane({self.name!r}, index={self.index}, "
+                f"inflight={sum(not h.done for h in self.handles)})")
+
+
+# ---------------------------------------------------------------------------
+# Stream runners (rebuilt on lanes)
+# ---------------------------------------------------------------------------
+
+def run_serial(thunks: Sequence[Callable[[], Any]],
+               lane: Optional[ExecutionLane] = None) -> List[float]:
     """Execute each workload to completion before the next; returns
     per-stream durations."""
+    lane = lane if lane is not None else ExecutionLane("serial")
     times = []
     for fn in thunks:
-        t0 = time.perf_counter()
-        _block(fn())
-        times.append(time.perf_counter() - t0)
+        h = lane.dispatch(fn)
+        h.join()
+        times.append(h.dispatch_to_ready_s)
     return times
 
-def run_async_dispatch(thunks: Sequence[Callable[[], Any]]) -> List[float]:
-    """Enqueue all workloads through the JAX dispatch queue, then observe
-    per-stream completion times (time from global start to each stream's
-    result being ready) — the ACE multi-queue analogue."""
-    t0 = time.perf_counter()
-    results = [fn() for fn in thunks]          # all enqueued, none blocked
+
+def run_async_dispatch(thunks: Sequence[Callable[[], Any]],
+                       lane: Optional[ExecutionLane] = None) -> List[float]:
+    """Enqueue all workloads through the JAX dispatch queue, then join in
+    dispatch order — the ACE multi-queue analogue. Returns each stream's
+    own dispatch→ready time (see :class:`LaneHandle`): a late stream is no
+    longer charged for earlier streams' completion waits, which the old
+    global-t0 measurement did whenever dispatch outpaced execution."""
+    lane = lane if lane is not None else ExecutionLane("async")
+    handles = [lane.dispatch(fn) for fn in thunks]   # all enqueued
     times = []
-    for r in results:
-        _block(r)
-        times.append(time.perf_counter() - t0)
+    for h in handles:
+        h.join()
+        times.append(h.dispatch_to_ready_s)
     return times
 
 

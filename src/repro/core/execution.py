@@ -112,6 +112,10 @@ class ExecutionPolicy:
     ``block_m/n/k`` of ``None`` defer to the autotune cache / kernel
     defaults. ``streams`` is the concurrency budget the policy resolver
     granted (consumed by serving / benchmark harnesses, not by ``matmul``).
+    ``overlap`` gates whether work under this policy may be co-dispatched
+    with other partitions' work by the :class:`OverlapPlanner` (serving
+    honors it per partition; ``no_overlap`` in the spec string turns it
+    off).
     """
     precision: str = "bf16"             # bf16 | fp8
     sparsity: str = "dense"             # dense | sparse24
@@ -120,6 +124,7 @@ class ExecutionPolicy:
     block_n: Optional[int] = None
     block_k: Optional[int] = None
     streams: int = 1
+    overlap: bool = True
     rationale: Tuple[str, ...] = ()
 
     def __post_init__(self):
@@ -148,10 +153,14 @@ class ExecutionPolicy:
             parts.append(f"{self.block_m}x{self.block_n}x{self.block_k}")
         if self.streams != 1:
             parts.append(f"streams={self.streams}")
+        if not self.overlap:
+            parts.append("no_overlap")
         return ":".join(parts)
 
     def describe(self) -> str:
         base = self.spec() + (f" streams={self.streams}")
+        if not self.overlap:
+            base += " no_overlap"
         if self.rationale:
             base += "\n  - " + "\n  - ".join(self.rationale)
         return base
@@ -161,7 +170,7 @@ def parse_policy(spec: str, base: Optional[ExecutionPolicy] = None
                  ) -> ExecutionPolicy:
     """Parse ``"fp8:sparse24:pallas"``-style specs (parts in any order,
     any subset): precision, sparsity, backend name, ``NxNxN`` blocks,
-    ``streams=N``."""
+    ``streams=N``, ``overlap``/``no_overlap``."""
     pol = base or ExecutionPolicy()
     updates: Dict[str, Any] = {}
     for tok in filter(None, (t.strip() for t in spec.split(":"))):
@@ -173,6 +182,8 @@ def parse_policy(spec: str, base: Optional[ExecutionPolicy] = None
             updates["backend"] = tok
         elif tok.startswith("streams="):
             updates["streams"] = int(tok.split("=", 1)[1])
+        elif tok in ("overlap", "no_overlap"):
+            updates["overlap"] = tok == "overlap"
         elif "x" in tok:
             bm, bn, bk = (int(v) for v in tok.split("x"))
             updates.update(block_m=bm, block_n=bn, block_k=bk)
@@ -605,3 +616,158 @@ def raw_matmul(a: jax.Array, b: jax.Array, *,
     if is_fp8:
         return be.fp8_qdot(a, b, 1.0, 1.0, out_dtype=out_dtype)
     return be.dense(a, b, out_dtype=out_dtype)
+
+
+def dispatch_matmul(x: jax.Array, w,
+                    policy: Optional[ExecutionPolicy] = None, *,
+                    out_dtype=jnp.bfloat16, lane=None, overlap_group=-1,
+                    tracer=None) -> "cc.LaneHandle":
+    """Async form of :func:`matmul`: enqueue the GEMM through the policy's
+    backend :meth:`~repro.kernels.registry.MatmulBackend.dispatch` entry
+    and return a joinable :class:`~repro.core.concurrency.LaneHandle`
+    instead of a blocked-on array. Same routing as :func:`matmul`
+    (PackedWeight → sparse24, fp8 2-D dense → fp8, else dense); trace-time
+    telemetry carries the lane and overlap-group so the planner's pairing
+    decisions are attributable."""
+    pol = policy or get_default_policy()
+    be = registry.get_backend(pol.backend)
+    packed = isinstance(w, PackedWeight)
+    tr = tracer if tracer is not None else _ambient_tracer()
+    if tr is not None:
+        kk, nn = (w.k, w.n) if packed else (w.shape[-2], w.shape[-1])
+        mm = 1
+        for d in x.shape[:-1]:
+            mm *= int(d)
+        tr.record_matmul(mm, int(kk), int(nn),
+                         precision=pol.precision, backend=pol.backend,
+                         policy=pol.spec(),
+                         lane=getattr(lane, "name", ""),
+                         overlap_group=overlap_group,
+                         op="sparse24" if packed else
+                         ("fp8" if pol.precision == "fp8"
+                          and w.ndim == 2 else "dense"))
+    if packed:
+        return be.dispatch("sparse24", x, w.values, w.meta, lane=lane,
+                           overlap_group=overlap_group,
+                           out_dtype=out_dtype, **pol.blocks)
+    if pol.precision == "fp8" and w.ndim == 2:
+        return be.dispatch("fp8", x, w, lane=lane,
+                           overlap_group=overlap_group,
+                           out_dtype=out_dtype, **pol.blocks)
+    return be.dispatch("dense", x, w, lane=lane,
+                       overlap_group=overlap_group,
+                       out_dtype=out_dtype, **pol.blocks)
+
+
+# ---------------------------------------------------------------------------
+# Overlap planning (measured online pairing — AsyncSparse / paper §6)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class OverlapCandidate:
+    """One unit of dispatchable work the planner may co-schedule.
+
+    ``ema_s`` is the Tracer's measured per-shape latency EMA for the
+    work's dominant GEMM (``None`` = never measured → stays serial this
+    round); ``allowed`` carries the owning policy's ``overlap`` gate."""
+    index: int
+    sparsity: str = "dense"
+    shape: Optional[Tuple[int, int, int, str]] = None
+    ema_s: Optional[float] = None
+    allowed: bool = True
+
+
+@dataclasses.dataclass
+class OverlapPlan:
+    """The planner's verdict for one dispatch round: ``groups`` are tuples
+    of candidate indices to co-dispatch (one overlap-group id each);
+    ``serial`` indices run alone. Every candidate index appears exactly
+    once across the two."""
+    groups: Tuple[Tuple[int, ...], ...]
+    serial: Tuple[int, ...]
+
+    @property
+    def n_overlapped(self) -> int:
+        return sum(len(g) for g in self.groups)
+
+
+class OverlapPlanner:
+    """Measured online pairing of sparse24/dense work for lane overlap.
+
+    The paper characterizes ACE concurrency *offline* (fig4/fig13:
+    contention is shape- and pairing-dependent, not uniform); AsyncSparse
+    shows sparse matmul winning specifically on asynchronous execution.
+    This planner schedules that trade *online*: work is dispatched serial
+    until the Tracer has a measured latency EMA for its shape, then
+    sparse24 candidates are paired with the dense candidate of closest
+    measured latency — a balanced pair overlaps fully, while a lopsided
+    one (ratio above ``max_imbalance``) would just serialize behind its
+    slow member, so it stays serial. Leftover same-kind candidates are
+    paired by adjacent measured latency when ``pair_homogeneous`` (two
+    dense partitions still overlap host work with device work).
+    """
+
+    def __init__(self, *, max_imbalance: float = 8.0,
+                 pair_homogeneous: bool = True):
+        if max_imbalance < 1.0:
+            raise ValueError("max_imbalance must be >= 1.0")
+        self.max_imbalance = max_imbalance
+        self.pair_homogeneous = pair_homogeneous
+
+    def _ratio(self, a: OverlapCandidate, b: OverlapCandidate) -> float:
+        hi = max(a.ema_s, b.ema_s)
+        lo = max(min(a.ema_s, b.ema_s), 1e-12)
+        return hi / lo
+
+    def candidate(self, index: int, *, sparsity: str = "dense",
+                  shape: Optional[Tuple[int, int, int, str]] = None,
+                  tracer=None, allowed: bool = True) -> OverlapCandidate:
+        """Build a candidate, looking its shape's measured EMA up in the
+        tracer (``None`` EMA when unmeasured — "measure first, overlap
+        second")."""
+        ema = None
+        if tracer is not None and shape is not None:
+            ema = tracer.shape_latency_ema().get(tuple(shape))
+        return OverlapCandidate(index=index, sparsity=sparsity,
+                                shape=shape, ema_s=ema, allowed=allowed)
+
+    def plan(self, candidates: Sequence[OverlapCandidate]) -> OverlapPlan:
+        serial = [c.index for c in candidates
+                  if not c.allowed or c.ema_s is None]
+        live = [c for c in candidates if c.allowed and c.ema_s is not None]
+        sparse = [c for c in live if c.sparsity == "sparse24"]
+        dense = [c for c in live if c.sparsity != "sparse24"]
+        groups = []
+        used = set()
+        # 1) each sparse24 candidate takes the closest-latency dense one
+        for s in sparse:
+            best, best_ratio = None, None
+            for d in dense:
+                if d.index in used:
+                    continue
+                ratio = self._ratio(s, d)
+                if ratio > self.max_imbalance:
+                    continue
+                if best_ratio is None or ratio < best_ratio:
+                    best, best_ratio = d, ratio
+            if best is not None:
+                used.add(s.index)
+                used.add(best.index)
+                groups.append((s.index, best.index))
+        # 2) leftovers pair by adjacent measured latency
+        left = sorted((c for c in live if c.index not in used),
+                      key=lambda c: (c.ema_s, c.index))
+        if self.pair_homogeneous:
+            i = 0
+            while i + 1 < len(left):
+                a, b = left[i], left[i + 1]
+                if self._ratio(a, b) <= self.max_imbalance:
+                    groups.append((a.index, b.index))
+                    used.add(a.index)
+                    used.add(b.index)
+                    i += 2
+                else:
+                    i += 1
+        serial.extend(c.index for c in left if c.index not in used)
+        return OverlapPlan(groups=tuple(tuple(g) for g in groups),
+                           serial=tuple(sorted(serial)))

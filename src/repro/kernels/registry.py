@@ -30,16 +30,22 @@ override the block shapes (``None`` → kernel defaults / autotune cache).
 from __future__ import annotations
 
 import dataclasses
+import functools
 import math
 from typing import Callable, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
+from repro.core import concurrency as cc
 from repro.core import fp8 as fp8lib
 from repro.core import sparsity as sp
 from repro.kernels import fp8_matmul as fm
 from repro.kernels import sparse24_matmul as sm
+
+# The four matmul flavors every backend provides — also the valid ``kind``
+# values for the async :meth:`MatmulBackend.dispatch` entry point.
+KINDS = ("dense", "fp8", "fp8_qdot", "sparse24")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -51,6 +57,31 @@ class MatmulBackend:
     fp8_qdot: Callable
     sparse24: Callable
     description: str = ""
+
+    def entry(self, kind: str) -> Callable:
+        if kind not in KINDS:
+            raise KeyError(
+                f"unknown matmul kind {kind!r}; one of {', '.join(KINDS)}")
+        return getattr(self, kind)
+
+    def dispatch(self, kind: str, *operands, lane=None, overlap_group=-1,
+                 **kw) -> "cc.LaneHandle":
+        """Async entry point: enqueue ``kind`` through JAX's dispatch queue
+        and return a joinable :class:`~repro.core.concurrency.LaneHandle`
+        (``join()`` → ``jax.block_until_ready`` on the result). Available
+        on every backend — off-TPU the pallas entries already run through
+        the interpret fallback, so dispatch-and-join works on CPU CI too.
+
+        ``lane`` threads the call onto a caller-owned
+        :class:`~repro.core.concurrency.ExecutionLane` (so its tracer and
+        bookkeeping see the op); without one, a throwaway lane named after
+        the backend is used."""
+        fn = self.entry(kind)
+        if lane is None:
+            lane = cc.ExecutionLane(f"{self.name}:{kind}")
+        return lane.dispatch(functools.partial(fn, *operands, **kw),
+                             label=f"{self.name}.{kind}",
+                             overlap_group=overlap_group)
 
 
 _REGISTRY: Dict[str, MatmulBackend] = {}

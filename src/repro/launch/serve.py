@@ -49,11 +49,12 @@ def build_spec(args, policy):
         seed=args.seed,
         policy=policy,
         migration=MigrationSpec(enabled=args.migrate),
-        # paged flags default off for callers driving build_spec with a
-        # legacy (pre-paging) namespace
+        # paged/overlap flags default for callers driving build_spec with
+        # a legacy (pre-paging / pre-lane) namespace
         paged=getattr(args, "paged", False),
         page_size=getattr(args, "page_size", 16),
-        pages=getattr(args, "pages", None))
+        pages=getattr(args, "pages", None),
+        overlap=not getattr(args, "no_overlap", False))
 
 
 def main():
@@ -112,6 +113,11 @@ def main():
     ap.add_argument("--pages", type=int, default=None,
                     help="physical pool size in pages (default: dense-"
                          "equivalent capacity, slots * max_len/page_size)")
+    ap.add_argument("--no-overlap", action="store_true",
+                    help="disable lane overlap: partitions step through "
+                         "the serial loop instead of OverlapPlanner-paired "
+                         "concurrent dispatch (token streams are identical "
+                         "either way)")
     ap.add_argument("--telemetry", action="store_true",
                     help="record per-op/per-tenant events to a Tracer and "
                          "print the observatory summary at exit")

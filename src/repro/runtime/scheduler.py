@@ -607,14 +607,25 @@ class StreamScheduler:
                 step=self.step_count, uid=req.uid)
 
     # -- driving ------------------------------------------------------------
-    def step(self) -> List[Request]:
-        """Fill free slots per the admission policy, then one decode step.
-        Returns the requests that completed this step."""
+    def dispatch_step(self, lane: Optional[cc.ExecutionLane] = None, *,
+                      overlap_group: int = -1):
+        """Dispatch half of one scheduler step: quota refresh + admission
+        (host work, including any prefill), then the decode enqueued
+        through ``lane``. Returns the session's
+        :class:`~repro.runtime.serve_loop.DecodeTicket`; pass it to
+        :meth:`join_step` exactly once. The split lets the serving runtime
+        co-dispatch heterogeneous partitions before joining any of them."""
         if self._t0 is None:
             self._t0 = time.perf_counter()
         self.quota.on_step(self)
         self._admit_free_slots()
-        done = self.session.decode_once()
+        return self.session.dispatch_decode(lane,
+                                            overlap_group=overlap_group)
+
+    def join_step(self, ticket) -> List[Request]:
+        """Join half of one scheduler step: block on the ticket, then the
+        same per-tenant accounting as the synchronous path."""
+        done = self.session.join_decode(ticket)
         self.step_count += 1
         for t in self.tenants.values():
             if t.active:
@@ -625,6 +636,11 @@ class StreamScheduler:
             self._finish(t, req)
         self._wall_s = time.perf_counter() - self._t0
         return done
+
+    def step(self) -> List[Request]:
+        """Fill free slots per the admission policy, then one decode step.
+        Returns the requests that completed this step."""
+        return self.join_step(self.dispatch_step())
 
     def run(self, max_steps: int = 100_000) -> List[Request]:
         """Drive until every queue is drained and every slot is free."""

@@ -25,6 +25,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ArchConfig
+from repro.core import concurrency as cc
 from repro.core import execution as ex
 from repro.core import paging
 from repro.models import (
@@ -327,6 +328,20 @@ def _paged_put_slot(pat, caches, state, slot, page_ids):
     return jax.tree_util.tree_map_with_path(put, caches, state)
 
 
+@dataclasses.dataclass
+class DecodeTicket:
+    """One in-flight decode step: dispatched through an ExecutionLane but
+    not yet joined. ``handle`` is None when the session had no active
+    slots (nothing was enqueued; only ``oom_done`` carries information).
+    Produced by :meth:`ServeSession.dispatch_decode`, consumed exactly
+    once by :meth:`ServeSession.join_decode`."""
+    handle: Optional[cc.LaneHandle]
+    oom_done: List["Request"]
+    lane: str = ""
+    overlap_group: int = -1
+    t0: float = 0.0
+
+
 class ServeSession:
     """Fixed-slot continuous batching over a single shared KV cache.
 
@@ -422,6 +437,7 @@ class ServeSession:
         self.tokens = jnp.zeros((batch_slots, 1), jnp.int32)
         self.queue: List[Request] = []
         self.completed: List[Request] = []
+        self._inflight: Optional[DecodeTicket] = None
 
     # -- slot-level API (used by the scheduler) ----------------------------
     def _policy_scope(self):
@@ -653,11 +669,22 @@ class ServeSession:
         self.tokens = self.tokens.at[slot, 0].set(export.token)
         return slot
 
-    def decode_once(self) -> List[Request]:
-        """One decode step over the active slots (no admission); returns
-        the requests that completed this step."""
+    def dispatch_decode(self, lane: Optional[cc.ExecutionLane] = None, *,
+                        overlap_group: int = -1) -> DecodeTicket:
+        """Dispatch half of a decode step: page bookkeeping, then enqueue
+        the jitted step through ``lane`` (JAX async dispatch — the call
+        returns future arrays without blocking) and hand back a
+        :class:`DecodeTicket`. The session's cache references advance to
+        the in-flight arrays immediately, but host state (tokens,
+        positions, completions) is only touched by :meth:`join_decode` —
+        so the token stream is byte-identical to the synchronous path
+        regardless of what other lanes do in between."""
+        if self._inflight is not None:
+            raise RuntimeError(
+                "decode already in flight: join_decode the previous "
+                "ticket before dispatching another step")
         if self.n_active == 0:
-            return []
+            return DecodeTicket(handle=None, oom_done=[])
         oom_done: List[Request] = []
         if self.paged:
             # lazy page append: make sure every active slot has a page
@@ -682,28 +709,54 @@ class ServeSession:
                         self.free_slot(i)
                         oom_done.append(req)
             if self.n_active == 0:
-                return oom_done
+                return DecodeTicket(handle=None, oom_done=oom_done)
         self.rng, sub = jax.random.split(self.rng)
+        if lane is None:
+            lane = cc.ExecutionLane("session")
         t0 = time.perf_counter()
         with self._policy_scope():
             if self.paged:
-                nxt, _, self.caches = self.step_fn(
-                    self.params, self.tokens, self.caches,
+                thunk = functools.partial(
+                    self.step_fn, self.params, self.tokens, self.caches,
                     jnp.asarray(self.slot_pos), self._page_map, sub)
             else:
-                nxt, _, self.caches = self.step_fn(
-                    self.params, self.tokens, self.caches,
+                thunk = functools.partial(
+                    self.step_fn, self.params, self.tokens, self.caches,
                     jnp.asarray(self.slot_pos), sub)
+            handle = lane.dispatch(thunk, label="decode",
+                                   overlap_group=overlap_group)
+        # the cache references advance to the enqueued (future) arrays
+        # now, so a later dispatch on another lane never aliases stale
+        # state; nothing here blocks
+        _, _, self.caches = handle.result
+        ticket = DecodeTicket(handle=handle, oom_done=oom_done,
+                              lane=lane.name, overlap_group=overlap_group,
+                              t0=t0)
+        self._inflight = ticket
+        return ticket
+
+    def join_decode(self, ticket: DecodeTicket) -> List[Request]:
+        """Join half of a decode step: block on the ticket's result, then
+        run the host-side token accounting exactly as the synchronous path
+        did. Records the ``decode`` event with the lane/overlap-group the
+        step actually ran under."""
+        self._inflight = None
+        if ticket.handle is None:
+            return list(ticket.oom_done)
+        nxt = ticket.handle.join()[0]
         nxt_np = np.asarray(nxt[:, 0])       # forces the step to complete
         if self.tracer is not None:
             self.tracer.record(
                 "decode", m=self.batch_slots, k=self.cfg.d_model,
                 n=self.cfg.d_ff, precision=self.cfg.precision,
                 **self._policy_tag(),
-                wall_s=time.perf_counter() - t0,
-                meta={"n_active": self.n_active})
+                wall_s=time.perf_counter() - ticket.t0,
+                lane=ticket.lane, overlap_group=ticket.overlap_group,
+                meta={"n_active": self.n_active,
+                      "dispatch_to_ready_s":
+                          ticket.handle.dispatch_to_ready_s})
         self.tokens = nxt
-        done = list(oom_done)
+        done = list(ticket.oom_done)
         for i, req in enumerate(self.slots):
             if req is None:
                 continue
@@ -717,6 +770,13 @@ class ServeSession:
                 # the pending next write
                 self.pager.note_tokens(i, int(self.slot_pos[i]) + 1)
         return done
+
+    def decode_once(self, lane: Optional[cc.ExecutionLane] = None
+                    ) -> List[Request]:
+        """One decode step over the active slots (no admission); returns
+        the requests that completed this step. Dispatch immediately
+        followed by join — the synchronous composition of the lane seam."""
+        return self.join_decode(self.dispatch_decode(lane))
 
     def _maybe_finish(self, slot: int, tok: int) -> bool:
         req = self.slots[slot]

@@ -218,6 +218,12 @@ class ServingSpec:
     paged: bool = False
     page_size: int = 16
     pages: Optional[int] = None
+    # Lane overlap: when True (and >1 partition), the runtime co-dispatches
+    # partitions the OverlapPlanner pairs from measured decode latencies
+    # instead of stepping them through a serial Python loop. Token streams
+    # are identical either way; only wall-clock overlap changes. Partitions
+    # whose policy says ``no_overlap`` stay serial individually.
+    overlap: bool = True
 
     def __post_init__(self):
         if not self.partitions:
@@ -264,6 +270,7 @@ class ServingSpec:
             "paged": self.paged,
             "page_size": self.page_size,
             "pages": self.pages,
+            "overlap": self.overlap,
         }
 
     @classmethod
@@ -478,6 +485,13 @@ class ServingRuntime:
             self.tracers.append(tr)
             self.sessions.append(sess)
             self.schedulers.append(sched)
+        # one dispatch lane per partition — the ACE-queue analogue the
+        # overlap step routes through — plus the planner that pairs them
+        # from measured decode EMAs (core/execution.OverlapPlanner)
+        self.lanes = [cc.ExecutionLane(f"lane{i}", index=i)
+                      for i in range(len(self.sessions))]
+        self.planner = ex.OverlapPlanner()
+        self._next_overlap_group = 0
         for tspec in spec.tenants:
             self.add_tenant(tspec.id, weight=tspec.weight,
                             partition=tspec.partition)
@@ -611,14 +625,69 @@ class ServingRuntime:
         step (idle partitions tick too — one global step domain is what
         keeps turnaround accounting exact across migrations), then the
         migration loop hands off draining tenants and re-checks partition
-        loads. Returns all requests completed this round."""
-        done: List[Request] = []
-        for sched in self.schedulers:
-            done.extend(sched.step())
+        loads. Returns all requests completed this round.
+
+        With ``spec.overlap`` (and >1 partition) the round goes through
+        :meth:`_step_lanes`: planner-paired partitions dispatch through
+        their lanes before any join, so heterogeneous partitions genuinely
+        execute concurrently. Per-partition state transitions are
+        identical either way — only wall-clock overlap differs."""
+        if self.spec.overlap and self.n_partitions > 1:
+            done = self._step_lanes()
+        else:
+            done = []
+            for sched in self.schedulers:
+                done.extend(sched.step())
         self.step_count += 1
         self._advance_migrations()
         if self.spec.migration.enabled:
             self._maybe_migrate()
+        return done
+
+    def _overlap_candidates(self) -> List[ex.OverlapCandidate]:
+        """One candidate per partition: its policy's sparsity and overlap
+        gate, plus the measured decode-latency EMA for its dominant decode
+        shape (the key ``join_decode`` records under). A partition without
+        a measurement stays serial this round — measure first, overlap
+        second."""
+        cands = []
+        for i, sess in enumerate(self.sessions):
+            pol = sess.policy if isinstance(sess.policy, ex.ExecutionPolicy) \
+                else None
+            shape = (sess.batch_slots, sess.cfg.d_model, sess.cfg.d_ff,
+                     sess.cfg.precision)
+            cands.append(self.planner.candidate(
+                i, sparsity=pol.sparsity if pol is not None else "dense",
+                shape=shape, tracer=self.tracers[i],
+                allowed=pol.overlap if pol is not None else True))
+        return cands
+
+    def _step_lanes(self) -> List[Request]:
+        """One planner-scheduled round: every paired partition dispatches
+        through its lane before *any* of them joins — the widest overlap
+        window the plan allows, so one partition's host work (admission,
+        prefill dispatch, token accounting) hides under another's in-flight
+        decode. Serial partitions then step synchronously. Each group's
+        pairing decision is recorded as an ``overlap`` event on every
+        member's tracer so the choice is attributable after the fact."""
+        plan = self.planner.plan(self._overlap_candidates())
+        done: List[Request] = []
+        tickets = []
+        for group in plan.groups:
+            gid = self._next_overlap_group
+            self._next_overlap_group += 1
+            for i in group:
+                tickets.append((i, group, gid, self.schedulers[i]
+                                .dispatch_step(self.lanes[i],
+                                               overlap_group=gid)))
+        for i, group, gid, ticket in tickets:
+            done.extend(self.schedulers[i].join_step(ticket))
+            self.tracers[i].record(
+                "overlap", lane=self.lanes[i].name, overlap_group=gid,
+                step=self.step_count,
+                meta={"group": [int(g) for g in group]})
+        for i in plan.serial:
+            done.extend(self.schedulers[i].step())
         return done
 
     def drain(self, max_steps: int = 100_000) -> List[Request]:

@@ -65,6 +65,8 @@ class Event:
     tenant: str = ""
     step: int = -1
     partition: int = -1              # spatial sub-mesh id (-1: unpartitioned)
+    lane: str = ""                   # ExecutionLane the op dispatched on
+    overlap_group: int = -1          # co-dispatched group id (-1: serial)
     meta: Dict[str, Any] = dataclasses.field(default_factory=dict)
 
     @property
@@ -322,6 +324,41 @@ class Tracer:
                     merged._tenant_counts.get(k, 0) + v
         return merged
 
+    def overlap_groups(self) -> Dict[int, List[Event]]:
+        """Wall-bearing events per overlap group over the retained window.
+        A group is a set of ops the :class:`~repro.core.execution.
+        OverlapPlanner` co-dispatched (same ``overlap_group`` id across
+        lanes); serial events (``overlap_group == -1``) are excluded."""
+        groups: Dict[int, List[Event]] = {}
+        for ev in self.events():
+            if ev.overlap_group >= 0 and ev.wall_s > 0:
+                groups.setdefault(ev.overlap_group, []).append(ev)
+        return groups
+
+    def overlap_summary(self) -> Dict[str, float]:
+        """Overlap efficiency achieved by the recorded overlap groups.
+
+        Per group the serial estimate is the sum of member dispatch→ready
+        walls and the concurrent estimate is their max (each member's wall
+        already spans the co-dispatched region), mirroring
+        :meth:`stream_overlap` but attributed to planner decisions.
+        Groups need ≥2 wall-bearing members to count."""
+        groups = [evs for evs in self.overlap_groups().values()
+                  if len(evs) >= 2]
+        if not groups:
+            return {"groups": 0, "events": 0,
+                    "mean_efficiency": 0.0, "mean_speedup": 0.0}
+        effs, spds = [], []
+        for evs in groups:
+            walls = [e.wall_s for e in evs]
+            serial, conc = float(sum(walls)), float(max(walls))
+            effs.append(cc.overlap_efficiency(serial, conc, len(walls)))
+            spds.append(serial / conc if conc > 0 else 0.0)
+        return {"groups": len(groups),
+                "events": int(sum(len(evs) for evs in groups)),
+                "mean_efficiency": float(np.mean(effs)),
+                "mean_speedup": float(np.mean(spds))}
+
     def stream_overlap(self) -> float:
         """Overlap efficiency implied by the recorded stream events (serial
         estimate = sum of per-stream times; wall = max)."""
@@ -367,6 +404,12 @@ class Tracer:
         migs = self.counts().get("migrate", 0)
         if migs:
             lines.append(f"  migrations: {migs} events")
+        ov = self.overlap_summary()
+        if ov["groups"]:
+            lines.append(
+                f"  overlap: {ov['groups']} group(s) / {ov['events']} ops, "
+                f"mean efficiency={ov['mean_efficiency']:.3f} "
+                f"speedup={ov['mean_speedup']:.2f}x")
         parts = {p: c for p, c in self.partition_counts().items() if p >= 0}
         if parts:
             lines.append("  partitions: " + " ".join(

@@ -119,3 +119,85 @@ def test_advisor_stream_limits():
     lat = adv.advise(cc.WorkloadProfile("bf16", 512, latency_sensitive=True))
     thr = adv.advise(cc.WorkloadProfile("bf16", 512, latency_sensitive=False))
     assert lat.max_streams == 4 and thr.max_streams == 8
+
+
+# ---------------------------------------------------------------------------
+# Execution lanes (dispatch-and-join seam)
+# ---------------------------------------------------------------------------
+
+def test_lane_handle_join_and_timing():
+    lane = cc.ExecutionLane("l0")
+    f = jax.jit(lambda a: (a @ a).sum())
+    x = jnp.ones((64, 64))
+    h = lane.dispatch(lambda: f(x), label="gemm", overlap_group=3)
+    assert h.lane == "l0" and h.label == "gemm" and h.overlap_group == 3
+    out = h.join()
+    assert float(out) == pytest.approx(64.0 * 64 * 64)
+    assert h.done and h.dispatch_to_ready_s > 0
+    ready = h.ready_t
+    assert h.join() is out             # idempotent: ready_t stamped once
+    assert h.ready_t == ready
+    assert lane.join_all() == [out]
+
+
+def test_lane_dispatch_returns_before_join():
+    """Dispatch enqueues; the handle is not ready until joined."""
+    lane = cc.ExecutionLane("l0")
+    h = lane.dispatch(lambda: jnp.zeros(()), label="z")
+    assert not h.done and h.ready_t is None
+    h.join()
+    assert h.done
+
+
+def test_run_async_dispatch_per_handle_timing():
+    """Satellite regression: per-stream times are per-handle
+    dispatch->ready, not offsets from one global t0 — so they no longer
+    sum to more than the wall just because a stream joined late."""
+    f = jax.jit(lambda a: (a @ a).sum())
+    xs = [jax.random.normal(jax.random.PRNGKey(i), (128, 128))
+          for i in range(3)]
+    times = cc.run_async_dispatch([lambda x=x: f(x) for x in xs])
+    assert len(times) == 3 and all(t > 0 for t in times)
+
+
+def test_stream_report_legacy_timing_note():
+    def mk(i):
+        return lambda: jnp.zeros(())
+    rep = cc.characterize_streams(mk, 2, mode="async")
+    assert rep.timing == "dispatch_to_ready"
+    d = rep.to_dict()
+    assert "per_stream_s" in d and "legacy_timing" in d
+    assert "global t0" in d["legacy_timing"]
+
+
+def test_stream_report_to_record_round_trips():
+    """fig4/fig5 share one Record schema with the autotune store."""
+    from repro.core import autotune
+    def mk(i):
+        return lambda: jnp.zeros(())
+    rep = cc.characterize_streams(mk, 2, mode="async")
+    rec = rep.to_record("fig4/test/streams=2", streams=2)
+    assert rec.us_per_call == pytest.approx(rep.wall_s * 1e6)
+    assert rec.derived["streams"] == 2
+    d = autotune.record_to_dict(rec)
+    per_stream = d["derived"]["per_stream_s"]
+    assert isinstance(per_stream, list) and len(per_stream) == 2
+    store = autotune.AutotuneStore()
+    store.add_records([rec])           # stream records ingest cleanly
+
+
+# ---------------------------------------------------------------------------
+# REPRO_N_CORES env validation
+# ---------------------------------------------------------------------------
+
+def test_detect_core_count_env_valid(monkeypatch):
+    monkeypatch.setenv("REPRO_N_CORES", "37")
+    assert cc.detect_core_count() == 37
+
+
+@pytest.mark.parametrize("bad", ["notanum", "0", "-3", "1.5"])
+def test_detect_core_count_env_invalid_warns_and_falls_back(
+        monkeypatch, bad):
+    monkeypatch.setenv("REPRO_N_CORES", bad)
+    with pytest.warns(RuntimeWarning, match="REPRO_N_CORES"):
+        assert cc.detect_core_count(default=99) == 99

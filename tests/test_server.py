@@ -520,3 +520,138 @@ def test_run_serving_with_declared_tenants(model):
     assert rep.tenant_partition["pinned"] == 1
     assert rep.tenant_partition["routed"] == 0   # spread fills the gap
     assert rep.tokens_out == 8
+
+
+# ---------------------------------------------------------------------------
+# Migration hysteresis (cooldown + strict-improvement victim selection)
+# ---------------------------------------------------------------------------
+
+def test_migration_cooldown_blocks_ping_pong(model):
+    """Oscillating load must not cause migration ping-pong: after the
+    first re-route, an immediate skew inversion stays put until the
+    cooldown expires, and consecutive migrations are always at least
+    ``cooldown`` steps apart."""
+    cfg, _ = model
+    cool = 12
+    rt = _runtime(model, _spec(migration=MigrationSpec(
+        enabled=True, interval=2, threshold=2.0, cooldown=cool)))
+    rt.add_tenant("hog", partition=0)
+    rt.add_tenant("small", partition=0)
+    rt.add_tenant("b", partition=1)
+    for r in _requests(cfg, 0, n=6, max_new=8):
+        rt.submit("hog", r)
+    for r in _requests(cfg, 1, n=2, max_new=6):
+        rt.submit("small", r)
+    steps = 0
+    while not rt.migrations and steps < 60:
+        rt.step()
+        steps += 1
+    assert rt.migrations and rt.migrations[0].reason == "load_aware"
+    first = rt.migrations[0].start_step
+    # oscillation stimulus: invert the skew right away — flood the
+    # partition the hog just landed on
+    assert rt.tenant_partition["hog"] == 1
+    for r in _requests(cfg, 5, n=8, max_new=24):
+        rt.submit("b", r)
+    guard = 0
+    while rt.step_count + 1 < first + cool and guard < 200:
+        rt.step()
+        guard += 1
+        assert len(rt.migrations) == 1   # hysteresis: no ping-pong yet
+    rt.drain()
+    starts = [m.start_step for m in rt.migrations]
+    assert all(b - a >= cool for a, b in zip(starts, starts[1:]))
+
+
+def test_pick_victim_requires_strict_improvement(model):
+    """The victim picker is the other half of the hysteresis: a move
+    that merely mirrors the imbalance (or ties it) is refused, and when
+    several tenants would help, the best equalizer wins."""
+    cfg, _ = model
+    rt = _runtime(model, _spec(placement="spread"))
+    rt.add_tenant("solo", partition=0)
+    rt.add_tenant("peer", partition=1)
+    # queued-only work with exact costs: request_cost = len(prompt)+max_new
+    (r,) = _requests(cfg, 0, n=1, max_new=11, length=5)      # cost 16
+    rt.submit("solo", r)
+    works = [rt._partition_work(0), rt._partition_work(1)]
+    assert works == [16.0, 0.0]
+    # a lone tenant's move mirrors the whole imbalance onto the target:
+    # |0 - 16| == |16 - 0| -> not a strict improvement -> no victim
+    assert rt._pick_victim(0, 1, works) is None
+    # a smaller second tenant and some target-side work break the tie:
+    # moving "lite" (cost 8) equalizes 26/8 -> 18/16; moving "solo"
+    # (cost 18) overshoots to 8/26 (no better than now) and is refused
+    rt.add_tenant("lite", partition=0)
+    (r2,) = _requests(cfg, 1, n=1, max_new=13, length=5)     # cost 18
+    rt.submit("solo", r2)
+    rt.schedulers[0].tenants["solo"].queue.remove(r)
+    rt.submit("lite", _requests(cfg, 2, n=1, max_new=3, length=5)[0])
+    rt.submit("peer", _requests(cfg, 3, n=1, max_new=3, length=5)[0])
+    works = [rt._partition_work(0), rt._partition_work(1)]
+    assert works == [26.0, 8.0]
+    assert rt._pick_victim(0, 1, works) == "lite"
+
+
+# ---------------------------------------------------------------------------
+# Async execution lanes (overlap on/off equivalence)
+# ---------------------------------------------------------------------------
+
+def test_overlap_serving_token_equality_and_lane_events(model):
+    """The tentpole contract: stepping heterogeneous partitions through
+    execution lanes (planner-paired sparse24 beside dense) changes wall
+    time only — greedy tokens match the serialized loop and the solo
+    runs, and the overlap decision is visible on the decode events."""
+    cfg, _ = model
+    outs = {}
+    for name, ov in (("overlap", True), ("serialized", False)):
+        reqs = _requests(cfg, 0, n=6, max_new=6)
+        rt = _runtime(model, _spec(policies=[FP8SP, BF16],
+                                   placement="spread", overlap=ov))
+        rt.add_tenant("t0")
+        rt.add_tenant("t1")
+        for j, r in enumerate(reqs):
+            rt.submit(f"t{j % 2}", r)
+        rt.drain()
+        outs[name] = [list(r.out) for r in reqs]
+        assert all(r.done for r in reqs)
+        if ov:
+            merged = rt.merged_tracer()
+            evs = [e for e in merged.events("decode")
+                   if e.lane and e.overlap_group >= 0]
+            assert evs, "overlap on but no lane-tagged decode events"
+            assert {e.lane for e in evs} == {"lane0", "lane1"}
+            assert merged.overlap_summary()["groups"] >= 1
+            solo = {}
+        else:
+            evs = [e for e in rt.merged_tracer().events("decode")
+                   if e.lane.startswith("lane") or e.overlap_group >= 0]
+            assert not evs, \
+                "serialized loop must not run on planner lanes"
+    assert outs["overlap"] == outs["serialized"]
+    # per-tenant solo equality under each partition's own policy
+    reqs = _requests(cfg, 0, n=6, max_new=6)
+    for pol, k in ((FP8SP, 0), (BF16, 1)):
+        mine = [r for j, r in enumerate(reqs) if j % 2 == k]
+        assert [out for j, out in enumerate(outs["overlap"])
+                if j % 2 == k] == _solo_outputs(model, mine, policy=pol)
+
+
+def test_overlap_token_equality_across_live_migration(model):
+    """Lanes stay token-exact through a mid-request live handoff."""
+    cfg, _ = model
+    outs = {}
+    for ov in (True, False):
+        reqs = _requests(cfg, 0, n=2, max_new=10)
+        rt = _runtime(model, _spec(overlap=ov))
+        rt.add_tenant("mover", partition=0)
+        for r in reqs:
+            rt.submit("mover", r)
+        for _ in range(3):
+            rt.step()
+        rt.migrate("mover", 1)
+        rt.drain()
+        assert all(r.done for r in reqs)
+        outs[ov] = [list(r.out) for r in reqs]
+        assert outs[ov] == [list(o) for o in _solo_outputs(model, reqs)]
+    assert outs[True] == outs[False]
