@@ -5,17 +5,29 @@ table/figure).
 Measured wall-times in this container are CPU-XLA numbers — the harness and
 its derived statistics (thresholds, fairness, break-even ratios) are the
 reproduction; TPU-target absolutes come from the dry-run roofline
-(EXPERIMENTS.md §Roofline)."""
+(EXPERIMENTS.md §Roofline).
+
+``run_metadata`` stamps the shared provenance block into every
+``BENCH_*.json`` artifact so ``benchmarks/trajectory.py`` can key runs by
+(figure, git sha, hardware) and never compare across hardware targets —
+the same one-artifact-per-target convention ``REPRO_AUTOTUNE_DIR``
+established for autotune stores."""
 from __future__ import annotations
 
+import os
+import subprocess
 import time
-from typing import Callable, List
+from typing import Any, Callable, Dict, List
 
 import jax
 
+from repro.core import concurrency as cc
 from repro.core.characterization import Record
 
-__all__ = ["Record", "time_fn", "emit"]
+__all__ = ["Record", "time_fn", "emit", "hardware_key", "git_sha",
+           "run_metadata", "stamp", "BENCH_SCHEMA_VERSION"]
+
+BENCH_SCHEMA_VERSION = 1
 
 
 def time_fn(fn: Callable, *args, iters: int = 5, warmup: int = 2) -> float:
@@ -31,3 +43,49 @@ def time_fn(fn: Callable, *args, iters: int = 5, warmup: int = 2) -> float:
 def emit(records: List[Record]) -> None:
     for r in records:
         print(r.csv())
+
+
+def hardware_key() -> str:
+    """One string per hardware target: JAX backend platform + the
+    effective core count (``REPRO_N_CORES`` override included). Bench
+    trajectories are only comparable within one key."""
+    return f"{jax.default_backend()}-c{cc.detect_core_count()}"
+
+
+def git_sha() -> str:
+    """Short commit sha of the working tree ('' outside a checkout).
+    CI's ``GITHUB_SHA`` wins over asking git (detached merge refs)."""
+    env = os.environ.get("GITHUB_SHA")
+    if env:
+        return env[:12]
+    try:
+        out = subprocess.run(
+            ["git", "rev-parse", "--short=12", "HEAD"],
+            capture_output=True, text=True, timeout=10,
+            cwd=os.path.dirname(os.path.abspath(__file__)))
+        return out.stdout.strip() if out.returncode == 0 else ""
+    except OSError:
+        return ""
+
+
+def run_metadata(figure: str) -> Dict[str, Any]:
+    """The shared provenance block every ``BENCH_*.json`` carries."""
+    from repro.kernels.registry import available_backends
+    return {
+        "bench_schema": BENCH_SCHEMA_VERSION,
+        "figure": figure,
+        "hardware_key": hardware_key(),
+        "git_sha": git_sha(),
+        "n_cores": cc.detect_core_count(),
+        "repro_n_cores_env": os.environ.get("REPRO_N_CORES") or None,
+        "backends": sorted(available_backends()),
+        "recorded_unix": round(time.time(), 3),
+    }
+
+
+def stamp(summary: Dict[str, Any], figure: str) -> Dict[str, Any]:
+    """Attach ``run_metadata`` under ``meta`` (and keep the legacy
+    top-level ``figure`` field) on a BENCH summary dict, in place."""
+    summary["figure"] = figure
+    summary["meta"] = run_metadata(figure)
+    return summary

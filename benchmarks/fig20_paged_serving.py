@@ -34,6 +34,7 @@ from pathlib import Path
 import jax
 import numpy as np
 
+from benchmarks.common import stamp
 from repro.configs import get_reduced
 from repro.core.characterization import Record
 from repro.core.concurrency import fairness
@@ -186,6 +187,7 @@ def run():
         "pagedsweep": [{"name": r.name, "us_per_call": round(r.us_per_call, 2)}
                        for r in sweep],
     }
+    stamp(summary, "fig20_paged_serving")
     BENCH_PATH.write_text(json.dumps(summary, indent=2) + "\n")
     return records
 

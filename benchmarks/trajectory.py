@@ -1,0 +1,301 @@
+"""BENCH_* trajectory store + CI regression gate.
+
+Every figure benchmark that matters for serving performance writes a
+``BENCH_<figure>.json`` summary (fig20, fig21, …). This module turns
+those one-off artifacts into a *trajectory*: a store
+(``TRAJECTORY.json``) appending each run keyed by
+``(figure, git_sha, hardware_key)`` — the hardware key following the
+``REPRO_AUTOTUNE_DIR`` one-artifact-per-target convention via
+``benchmarks.common.hardware_key()`` — plus a ``--check`` mode that
+compares the current BENCH files against the stored baseline with
+per-metric tolerance bands and exits non-zero on regression. CI runs it
+after the fig20/fig21 smokes, so a PR that quietly loses the paged
+tokens/step win or the fig21 overlap speedup fails the build instead of
+shipping (the ReFrame performance-regression idiom, applied to the
+repo's own serving stack).
+
+Metric bands
+------------
+Deterministic metrics (token counts over scheduler steps, handoff
+bytes, fairness indices) gate tightly; wall-clock-derived metrics
+(p99 step µs) vary across runners and are *tracked* but never gate;
+same-run wall ratios (overlap speedup) gate loosely. An injected 20%
+tokens/step regression always trips the gate — pinned by
+``tests/test_observability.py``.
+
+Usage::
+
+    python -m benchmarks.trajectory --dir .              # append runs
+    python -m benchmarks.trajectory --check --dir .      # gate (CI)
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import glob
+import json
+import os
+import sys
+import time
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+STORE_NAME = "TRAJECTORY.json"
+STORE_SCHEMA = 1
+
+
+# ---------------------------------------------------------------------------
+# Metric tables
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class Metric:
+    """One gated (or tracked) scalar of a figure's BENCH summary.
+
+    ``path`` is a dotted path into the summary dict unless ``extract``
+    overrides it. ``direction`` says which way is better; a *regression*
+    is a move in the bad direction beyond ``tol`` (relative).
+    ``gate=False`` metrics are reported for the trajectory but never
+    fail the check (wall-clock absolutes across heterogeneous runners).
+    """
+    name: str
+    path: str = ""
+    direction: str = "higher"        # "higher" | "lower"
+    tol: float = 0.10
+    gate: bool = True
+    extract: Optional[Callable[[Dict[str, Any]], float]] = None
+
+    def value(self, doc: Dict[str, Any]) -> Optional[float]:
+        if self.extract is not None:
+            try:
+                return float(self.extract(doc))
+            except (KeyError, ValueError, TypeError, ZeroDivisionError):
+                return None
+        cur: Any = doc
+        for part in (self.path or self.name).split("."):
+            if not isinstance(cur, dict) or part not in cur:
+                return None
+            cur = cur[part]
+        try:
+            return float(cur)
+        except (TypeError, ValueError):
+            return None
+
+    def regressed(self, baseline: float, current: float) -> bool:
+        if self.direction == "higher":
+            return current < baseline * (1.0 - self.tol)
+        return current > baseline * (1.0 + self.tol)
+
+
+def _max_paged_handoff(doc: Dict[str, Any]) -> float:
+    return max(h["handoff_bytes"] for h in doc["handoff"]
+               if h["layout"] == "paged")
+
+
+FIGURE_METRICS: Dict[str, Tuple[Metric, ...]] = {
+    # fig20: paged serving density. tokens_per_step / density / fairness /
+    # handoff bytes are deterministic (token counts, page tables); step
+    # wall percentiles are runner-dependent -> track only.
+    "fig20_paged_serving": (
+        Metric("paged.tokens_per_step", tol=0.10),
+        Metric("dense.tokens_per_step", tol=0.10),
+        Metric("density_ratio", tol=0.05),
+        Metric("paged.fairness", tol=0.05),
+        Metric("paged.resident_peak", tol=0.05),
+        Metric("max_paged_handoff_bytes", direction="lower", tol=0.05,
+               extract=_max_paged_handoff),
+        Metric("paged.p99_step_us", direction="lower", gate=False),
+        Metric("dense.p99_step_us", direction="lower", gate=False),
+    ),
+    # fig21: async overlap. Serialized tok/step is deterministic
+    # (tokens / lockstep steps); the overlap arm folds a wall-clock
+    # ratio in -> slightly wider band; the speedup itself is a same-run
+    # wall ratio -> loose band (CI runners are noisy but the win must
+    # not invert); raw contention walls -> track only.
+    "fig21_async_overlap": (
+        Metric("serialized.tok_per_step", tol=0.10),
+        Metric("overlap.tok_per_step", tol=0.15),
+        Metric("serving_speedup", tol=0.40),
+        Metric("tokens_equal", tol=0.0),
+        Metric("overlap.overlap_groups", tol=0.50),
+        Metric("contention.speedup", gate=False),
+        Metric("contention.serialized_wall_us", direction="lower",
+               gate=False),
+        Metric("contention.overlap_wall_us", direction="lower",
+               gate=False),
+    ),
+}
+
+
+# ---------------------------------------------------------------------------
+# Store
+# ---------------------------------------------------------------------------
+
+def _atomic_write(path: str, text: str) -> None:
+    import tempfile
+    d = os.path.dirname(path) or "."
+    fd, tmp = tempfile.mkstemp(dir=d, prefix=".trajectory-")
+    try:
+        with os.fdopen(fd, "w") as f:
+            f.write(text)
+        os.replace(tmp, path)
+    except BaseException:
+        try:
+            os.unlink(tmp)
+        except OSError:
+            pass
+        raise
+
+
+def load_store(path: str) -> Dict[str, Any]:
+    if not os.path.exists(path):
+        return {"schema": STORE_SCHEMA, "runs": []}
+    with open(path) as f:
+        store = json.load(f)
+    if store.get("schema") != STORE_SCHEMA:
+        raise ValueError(f"{path}: store schema {store.get('schema')!r} "
+                         f"!= {STORE_SCHEMA}")
+    return store
+
+
+def save_store(store: Dict[str, Any], path: str) -> str:
+    _atomic_write(path, json.dumps(store, indent=1) + "\n")
+    return path
+
+
+def _doc_meta(doc: Dict[str, Any], path: str) -> Dict[str, str]:
+    """(figure, sha, hardware) of one BENCH doc; pre-metadata-era files
+    fall back to the current environment's stamp so old artifacts stay
+    ingestible."""
+    meta = doc.get("meta") or {}
+    figure = meta.get("figure") or doc.get("figure") \
+        or os.path.basename(path).replace("BENCH_", "").replace(".json", "")
+    if not meta:
+        from benchmarks.common import run_metadata
+        meta = run_metadata(figure)
+    return {"figure": figure,
+            "git_sha": meta.get("git_sha", ""),
+            "hardware_key": meta.get("hardware_key", "unknown")}
+
+
+def metric_values(figure: str, doc: Dict[str, Any]) -> Dict[str, float]:
+    vals = {}
+    for m in FIGURE_METRICS.get(figure, ()):
+        v = m.value(doc)
+        if v is not None:
+            vals[m.name] = v
+    return vals
+
+
+def bench_files(directory: str) -> List[str]:
+    return sorted(p for p in glob.glob(os.path.join(directory,
+                                                    "BENCH_*.json"))
+                  if not p.endswith("_trace.json"))
+
+
+def append_runs(directory: str, store_path: str) -> List[Dict[str, Any]]:
+    """Fold every BENCH_*.json under ``directory`` into the store. A run
+    with the same (figure, git_sha, hardware_key) replaces its previous
+    entry (idempotent re-runs); anything else appends."""
+    store = load_store(store_path)
+    added = []
+    for path in bench_files(directory):
+        with open(path) as f:
+            doc = json.load(f)
+        key = _doc_meta(doc, path)
+        figure = key["figure"]
+        if figure not in FIGURE_METRICS:
+            continue                      # no gated metrics for this figure
+        entry = {**key,
+                 "recorded_unix": round(time.time(), 3),
+                 "metrics": metric_values(figure, doc)}
+        store["runs"] = [r for r in store["runs"]
+                         if (r["figure"], r["git_sha"], r["hardware_key"])
+                         != (figure, key["git_sha"], key["hardware_key"])]
+        store["runs"].append(entry)
+        added.append(entry)
+    save_store(store, store_path)
+    return added
+
+
+def baseline_for(store: Dict[str, Any], figure: str,
+                 hardware_key: str) -> Optional[Dict[str, Any]]:
+    """Latest stored run of ``figure`` on the same hardware target."""
+    runs = [r for r in store["runs"]
+            if r["figure"] == figure and r["hardware_key"] == hardware_key]
+    return runs[-1] if runs else None
+
+
+# ---------------------------------------------------------------------------
+# The gate
+# ---------------------------------------------------------------------------
+
+def check(directory: str, store_path: str, out=sys.stdout) -> int:
+    """Compare current BENCH files against stored baselines. Returns the
+    number of regressions (0 = pass). Missing baselines and track-only
+    metrics report but never fail."""
+    store = load_store(store_path)
+    regressions = 0
+    checked = 0
+    for path in bench_files(directory):
+        with open(path) as f:
+            doc = json.load(f)
+        key = _doc_meta(doc, path)
+        figure = key["figure"]
+        metrics = FIGURE_METRICS.get(figure)
+        if not metrics:
+            continue
+        base = baseline_for(store, figure, key["hardware_key"])
+        if base is None:
+            print(f"[trajectory] {figure}: no baseline for "
+                  f"{key['hardware_key']} — recording only", file=out)
+            continue
+        for m in metrics:
+            cur = m.value(doc)
+            ref = base["metrics"].get(m.name)
+            if cur is None or ref is None:
+                continue
+            checked += 1
+            bad = m.gate and m.regressed(ref, cur)
+            drift = (cur / ref - 1.0) * 100 if ref else 0.0
+            tag = "REGRESSION" if bad else (
+                "track" if not m.gate else "ok")
+            print(f"[trajectory] {figure}/{m.name}: {cur:g} vs "
+                  f"baseline {ref:g} ({drift:+.1f}%, want "
+                  f"{m.direction}, tol {m.tol * 100:.0f}%) {tag}",
+                  file=out)
+            if bad:
+                regressions += 1
+    print(f"[trajectory] {checked} metric(s) checked, "
+          f"{regressions} regression(s)", file=out)
+    return regressions
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    ap = argparse.ArgumentParser(
+        description="BENCH_* trajectory store + regression gate")
+    ap.add_argument("--dir", default=".",
+                    help="directory holding BENCH_*.json artifacts")
+    ap.add_argument("--store", default=None,
+                    help=f"trajectory store path (default: "
+                         f"<dir>/{STORE_NAME})")
+    ap.add_argument("--check", action="store_true",
+                    help="gate current BENCH files against the stored "
+                         "baselines (exit 1 on regression) instead of "
+                         "appending them")
+    args = ap.parse_args(argv)
+    store_path = args.store or os.path.join(args.dir, STORE_NAME)
+    if args.check:
+        return 1 if check(args.dir, store_path) else 0
+    added = append_runs(args.dir, store_path)
+    for e in added:
+        print(f"[trajectory] recorded {e['figure']} @ {e['git_sha']} "
+              f"on {e['hardware_key']}: "
+              f"{len(e['metrics'])} metric(s)")
+    if not added:
+        print(f"[trajectory] no BENCH_*.json with known figures under "
+              f"{args.dir!r}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

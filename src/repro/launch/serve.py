@@ -54,7 +54,8 @@ def build_spec(args, policy):
         paged=getattr(args, "paged", False),
         page_size=getattr(args, "page_size", 16),
         pages=getattr(args, "pages", None),
-        overlap=not getattr(args, "no_overlap", False))
+        overlap=not getattr(args, "no_overlap", False),
+        metrics=getattr(args, "metrics_out", None) is not None)
 
 
 def main():
@@ -121,6 +122,19 @@ def main():
     ap.add_argument("--telemetry", action="store_true",
                     help="record per-op/per-tenant events to a Tracer and "
                          "print the observatory summary at exit")
+    ap.add_argument("--metrics-out", default=None, metavar="PATH",
+                    help="write the metrics-registry snapshot at exit "
+                         "(.json, or Prometheus text for .prom/.txt); "
+                         "implies the metrics plane (runtime/metrics.py)")
+    ap.add_argument("--trace-out", default=None, metavar="PATH",
+                    help="export the run's telemetry as Chrome trace_event "
+                         "JSON (runtime/traceview.py) — open in "
+                         "chrome://tracing or https://ui.perfetto.dev")
+    ap.add_argument("--slo", default=None,
+                    help="SLO class for every shorthand tenant "
+                         "('latency:12', 'latency:0.05@wall_s', "
+                         "'throughput:1.5', 'batch:0.9'); reports and "
+                         "metrics surface per-tenant attainment")
     ap.add_argument("--autotune", action="store_true",
                     help="load the persistent autotune artifact "
                          "(launch/profile.py) and resolve policies from "
@@ -140,7 +154,10 @@ def main():
         store = autotune.install()
         print(f"[serve] autotune artifact "
               f"{'loaded: ' + store.path if store else 'not found'}")
-    tracer = telemetry.Tracer() if args.telemetry else None
+    # --metrics-out / --trace-out need an event stream even without
+    # --telemetry's summary printing
+    want_tracer = args.telemetry or args.metrics_out or args.trace_out
+    tracer = telemetry.Tracer() if want_tracer else None
     if tracer is not None:
         telemetry.set_tracer(tracer)    # observe trace-time matmul events
 
@@ -164,6 +181,8 @@ def main():
         print(f"[serve] spec loaded: {args.spec} "
               f"({spec.n_partitions} partitions, {spec.placement}, "
               f"migration={'on' if spec.migration.enabled else 'off'})")
+        if args.metrics_out and not spec.metrics:
+            spec = dataclasses.replace(spec, metrics=True)
     else:
         spec = build_spec(args, policy)
     if args.save_spec:
@@ -197,18 +216,27 @@ def main():
         if not tenant_ids:
             tenant_ids = [f"tenant{i}" for i in range(max(args.tenants, 1))]
             for tid in tenant_ids:
-                part = runtime.add_tenant(tid)
+                part = runtime.add_tenant(tid, slo=args.slo)
                 print(f"[serve] {tid} -> partition {part} "
                       f"({spec.placement})")
         for uid, req in enumerate(requests):
             runtime.submit(tenant_ids[uid % len(tenant_ids)], req)
         done = runtime.drain()
         print(runtime.report().summary())
-        if tracer is not None:
+        if args.telemetry:
             print(runtime.merged_tracer().summary())
             # the ambient tracer holds the trace-time per-op events
             # (matmul/resolve) the per-partition tracers don't see
             print(tracer.summary())
+        if args.metrics_out and runtime.metrics is not None:
+            print(f"[serve] metrics written: "
+                  f"{runtime.metrics.save(args.metrics_out)}")
+        if args.trace_out:
+            from repro.runtime import traceview
+            merged = telemetry.Tracer.merge(*runtime.tracers, tracer)
+            print(f"[serve] trace written: "
+                  f"{traceview.export_chrome_trace(merged, args.trace_out)}"
+                  " (open in chrome://tracing or ui.perfetto.dev)")
         dt = time.time() - t0
         total_new = sum(len(r.out) for r in done)
         print(f"[serve] {len(done)}/{args.requests} requests, "
@@ -223,6 +251,10 @@ def main():
                         verbose_policy=True, telemetry=tracer,
                         paged=args.paged, page_size=args.page_size,
                         pages=args.pages)
+    registry = None
+    if args.metrics_out:
+        from repro.runtime.metrics import MetricsSink
+        registry = MetricsSink().attach(tracer).registry
     if args.paged:
         print(f"[serve] paged cache: page_size={sess.page_size} "
               f"pages={sess.pages}")
@@ -243,7 +275,7 @@ def main():
                 args.policy == "auto" or "streams=" in (args.policy or "")):
             tpol = sess.policy
         for i in range(args.tenants):
-            sched.add_tenant(f"tenant{i}", policy=tpol)
+            sched.add_tenant(f"tenant{i}", policy=tpol, slo=args.slo)
         for uid, req in enumerate(requests):
             sched.submit(f"tenant{uid % args.tenants}", req)
         done = sched.run()
@@ -259,8 +291,15 @@ def main():
           f"({total_new / max(dt, 1e-9):.1f} tok/s aggregate)")
     for r in done[:4]:
         print(f"  req {r.uid}: {len(r.out)} new tokens, first 8: {r.out[:8]}")
-    if tracer is not None:
+    if args.telemetry and tracer is not None:
         print(tracer.summary())
+    if registry is not None:
+        print(f"[serve] metrics written: {registry.save(args.metrics_out)}")
+    if args.trace_out and tracer is not None:
+        from repro.runtime import traceview
+        print(f"[serve] trace written: "
+              f"{traceview.export_chrome_trace(tracer, args.trace_out)}"
+              " (open in chrome://tracing or ui.perfetto.dev)")
     return 0
 
 

@@ -70,12 +70,128 @@ def request_cost(req: Request) -> int:
     return len(req.prompt) + req.max_new
 
 
+# ---------------------------------------------------------------------------
+# SLO classes (latency-bound / throughput-bound / batch tenants)
+# ---------------------------------------------------------------------------
+
+SLO_KINDS = ("latency", "throughput", "batch")
+
+
+@dataclasses.dataclass(frozen=True)
+class SLO:
+    """A tenant's service-level objective, in one of three classes:
+
+    * ``latency`` — ``target`` is a per-request turnaround bound;
+      attainment is the fraction of completed requests that met it. The
+      domain is ``metric``: ``"turnaround_steps"`` (deterministic
+      scheduler steps — reproducible run-to-run, the default) or
+      ``"wall_s"`` (wall-clock seconds, for real deployments). A tenant
+      with demand but zero completions is *starved*: attainment 0.0, not
+      undefined — starvation must read as the worst miss.
+    * ``throughput`` — ``target`` is a delivered-rate floor in tokens
+      per global scheduler step; attainment is
+      ``min(1, observed / target)``.
+    * ``batch`` — best-effort completion: ``target`` is the required
+      completion ratio (default 1.0); attainment is
+      ``min(1, (completed / submitted) / target)``.
+
+    A tenant with no demand has no attainment (``None``) — idle is not a
+    miss. Spec strings parse as ``kind:target[@metric]``
+    (``"latency:8"``, ``"latency:0.05@wall_s"``, ``"throughput:2.5"``,
+    ``"batch"``)."""
+    kind: str
+    target: float = 0.0
+    metric: str = "turnaround_steps"
+
+    def __post_init__(self):
+        if self.kind not in SLO_KINDS:
+            raise ValueError(f"SLO kind {self.kind!r} not in {SLO_KINDS}")
+        if self.kind == "batch" and self.target == 0.0:
+            object.__setattr__(self, "target", 1.0)
+        if self.target <= 0:
+            raise ValueError(f"SLO target must be positive, got "
+                             f"{self.target}")
+        if self.metric not in ("turnaround_steps", "wall_s"):
+            raise ValueError(f"SLO metric {self.metric!r} not in "
+                             "('turnaround_steps', 'wall_s')")
+
+    def spec(self) -> str:
+        s = f"{self.kind}:{self.target:g}"
+        if self.kind == "latency" and self.metric != "turnaround_steps":
+            s += f"@{self.metric}"
+        return s
+
+    @classmethod
+    def parse(cls, spec: Union[None, str, Dict, "SLO"]) -> Optional["SLO"]:
+        """``None`` / spec-string / dict / instance → ``Optional[SLO]``."""
+        if spec is None or isinstance(spec, SLO):
+            return spec
+        if isinstance(spec, dict):
+            return cls(**spec)
+        if not isinstance(spec, str):
+            raise TypeError(f"SLO spec {spec!r} is not None/str/dict/SLO")
+        body, _, metric = spec.partition("@")
+        kind, _, target = body.partition(":")
+        kw: Dict[str, Any] = {"kind": kind.strip()}
+        if target.strip():
+            kw["target"] = float(target)
+        elif kind.strip() != "batch":
+            raise ValueError(f"SLO {spec!r}: {kind!r} needs a target "
+                             "(\"kind:target\")")
+        if metric.strip():
+            kw["metric"] = metric.strip()
+        return cls(**kw)
+
+    def attainment(self, *, samples: Sequence[float] = (),
+                   tokens_out: int = 0, steps: int = 0,
+                   completed: int = 0, submitted: int = 0
+                   ) -> Optional[float]:
+        """Attainment ratio in [0, 1] from a tenant's observed record;
+        ``samples`` is the per-request latency population in this SLO's
+        ``metric`` domain (only consulted by the ``latency`` class).
+        ``None`` with no demand."""
+        if submitted <= 0:
+            return None
+        if self.kind == "latency":
+            if completed <= 0:
+                return 0.0           # starved: demand, nothing finished
+            if not samples:
+                return 0.0
+            met = sum(1 for s in samples if s <= self.target)
+            return met / len(samples)
+        if self.kind == "throughput":
+            rate = tokens_out / steps if steps > 0 else 0.0
+            return min(1.0, rate / self.target)
+        return min(1.0, (completed / submitted) / self.target)
+
+
+def attainment_from_tracer(tracer, tenant_id: str, slo: Optional[SLO],
+                           steps: int) -> Optional[float]:
+    """SLO attainment from telemetry alone (the metrics plane's path —
+    reports use the exact scheduler records instead): latency samples
+    come from ``Tracer.tenant_latencies`` (the same window
+    ``tenant_percentiles`` summarizes), demand/tokens from the monotonic
+    per-tenant counters, so the ratio survives ring eviction."""
+    if slo is None:
+        return None
+    completed = tracer.tenant_counts("request").get(tenant_id, 0)
+    admitted = tracer.tenant_counts("admit").get(tenant_id, 0)
+    samples = tracer.tenant_latencies(slo.metric).get(tenant_id, [])
+    tokens = sum(ev.meta.get("tokens", 0)
+                 for ev in tracer.events("request")
+                 if ev.tenant == tenant_id)
+    return slo.attainment(samples=samples, tokens_out=tokens, steps=steps,
+                          completed=completed,
+                          submitted=max(admitted, completed))
+
+
 @dataclasses.dataclass
 class Tenant:
     """One tenant's queue + accounting."""
     tenant_id: str
     weight: float = 1.0
     policy: Optional[ex.ExecutionPolicy] = None
+    slo: Optional[SLO] = None
     queue: List[Request] = dataclasses.field(default_factory=list)
     completed: List[Request] = dataclasses.field(default_factory=list)
     submitted: int = 0
@@ -108,6 +224,8 @@ class TenantReport:
     submitted: int = 0               # demand (0: registered but idle)
     partition: int = -1              # serving partition (-1: unpartitioned)
     migrations: int = 0              # times this tenant was live-migrated
+    slo: str = ""                    # SLO spec string ("": no SLO)
+    slo_attainment: Optional[float] = None   # None: no SLO or no demand
 
     def to_dict(self) -> Dict[str, Any]:
         return dataclasses.asdict(self)
@@ -131,6 +249,16 @@ def build_tenant_report(tid: str, records: Sequence[Tenant],
     waits = [float(r.admit_step - r.submit_step) for r in completed]
     lat = cc.latency_percentiles([r.latency_s for r in completed])
     mean_ta = float(np.mean(ta)) if ta else 0.0
+    slo = next((t.slo for t in records if t.slo is not None), None)
+    slo_att = None
+    if slo is not None:
+        samples = ta if slo.metric == "turnaround_steps" \
+            else [r.latency_s for r in completed]
+        slo_att = slo.attainment(
+            samples=samples,
+            tokens_out=sum(t.tokens_out for t in records),
+            steps=step_count, completed=len(completed),
+            submitted=submitted)
     row = TenantReport(
         tenant_id=tid,
         completed=len(completed),
@@ -142,7 +270,9 @@ def build_tenant_report(tid: str, records: Sequence[Tenant],
         p99_latency_s=lat["p99"],
         submitted=submitted,
         partition=partition,
-        migrations=migrations)
+        migrations=migrations,
+        slo=slo.spec() if slo is not None else "",
+        slo_attainment=slo_att)
     if ta:
         contribution: Optional[float] = mean_ta
     elif submitted:
@@ -186,12 +316,17 @@ class SchedulerReport:
             f"{self.wall_s:.2f}s | fairness={self.fairness:.3f} "
             f"cv={self.cv:.3f} overlap_eff={self.overlap_efficiency:.3f}"]
         for t in self.tenants:
-            lines.append(
+            line = (
                 f"  {t.tenant_id}: {t.completed} done, {t.tokens_out} tok, "
                 f"turnaround={t.mean_turnaround_steps:.1f} steps, "
                 f"wait={t.mean_queue_wait_steps:.1f} steps, "
                 f"p50={t.p50_latency_s * 1e3:.1f}ms "
                 f"p99={t.p99_latency_s * 1e3:.1f}ms")
+            if t.slo:
+                att = "n/a" if t.slo_attainment is None \
+                    else f"{t.slo_attainment:.2f}"
+                line += f" slo[{t.slo}]={att}"
+            lines.append(line)
         return "\n".join(lines)
 
 
@@ -469,12 +604,14 @@ class StreamScheduler:
 
     # -- tenants / submission ----------------------------------------------
     def add_tenant(self, tenant_id: str, *, weight: float = 1.0,
-                   policy: Optional[ex.ExecutionPolicy] = None) -> Tenant:
+                   policy: Optional[ex.ExecutionPolicy] = None,
+                   slo: Union[None, str, Dict, SLO] = None) -> Tenant:
         if tenant_id in self.tenants:
             raise ValueError(f"tenant {tenant_id!r} already registered")
         if weight <= 0:
             raise ValueError("tenant weight must be positive")
-        t = Tenant(tenant_id=tenant_id, weight=weight, policy=policy)
+        t = Tenant(tenant_id=tenant_id, weight=weight, policy=policy,
+                   slo=SLO.parse(slo))
         self.tenants[tenant_id] = t
         self._order.append(tenant_id)
         self._default_cap = None         # advisor cap depends on tenancy
@@ -483,7 +620,8 @@ class StreamScheduler:
             # telemetry (it has no admit/request events of its own)
             self.tracer.record("register", tenant=tenant_id,
                                step=self.step_count,
-                               meta={"weight": weight})
+                               meta={"weight": weight,
+                                     "slo": t.slo.spec() if t.slo else ""})
         return t
 
     def freeze(self, tenant_id: str) -> None:

@@ -50,7 +50,7 @@ from repro.core import concurrency as cc
 from repro.core import execution as ex
 from repro.runtime import telemetry
 from repro.runtime.scheduler import (
-    ADMISSION_POLICIES, QuotaPolicy, SchedulerReport, StreamScheduler,
+    ADMISSION_POLICIES, QuotaPolicy, SLO, SchedulerReport, StreamScheduler,
     Tenant, TenantReport, build_tenant_report, request_cost)
 from repro.runtime.serve_loop import Request, ServeSession, export_nbytes
 
@@ -188,13 +188,25 @@ class MigrationSpec:
 @dataclasses.dataclass(frozen=True)
 class TenantSpec:
     """A declaratively pre-registered tenant (optional — tenants can also
-    be added at runtime via :meth:`ServingRuntime.add_tenant`)."""
+    be added at runtime via :meth:`ServingRuntime.add_tenant`).
+
+    ``slo`` is an optional service-level objective — an
+    :class:`~repro.runtime.scheduler.SLO`, a spec string
+    (``"latency:8"``, ``"latency:0.05@wall_s"``, ``"throughput:2.5"``,
+    ``"batch:0.9"``), or a dict — whose attainment ratio the reports and
+    the metrics plane surface per tenant."""
     id: str
     weight: float = 1.0
     partition: Optional[int] = None  # None: router-placed
+    slo: Any = None                  # None | str | dict | SLO
+
+    def __post_init__(self):
+        object.__setattr__(self, "slo", SLO.parse(self.slo))
 
     def to_dict(self) -> Dict[str, Any]:
-        return dataclasses.asdict(self)
+        d = dataclasses.asdict(self)
+        d["slo"] = self.slo.spec() if self.slo is not None else None
+        return d
 
 
 @dataclasses.dataclass(frozen=True)
@@ -224,6 +236,11 @@ class ServingSpec:
     # are identical either way; only wall-clock overlap changes. Partitions
     # whose policy says ``no_overlap`` stay serial individually.
     overlap: bool = True
+    # Metrics plane (runtime/metrics.py): when True the runtime builds a
+    # MetricsRegistry and attaches a MetricsSink to every partition
+    # tracer; the registry is reachable as ``runtime.metrics`` and every
+    # ``report()`` folds SLO attainment / fairness / occupancy gauges in.
+    metrics: bool = False
 
     def __post_init__(self):
         if not self.partitions:
@@ -271,6 +288,7 @@ class ServingSpec:
             "page_size": self.page_size,
             "pages": self.pages,
             "overlap": self.overlap,
+            "metrics": self.metrics,
         }
 
     @classmethod
@@ -382,6 +400,10 @@ class PartitionedReport:
                 for i, p in enumerate(self.policies)))
         for t in self.tenants:
             extra = f" (migrated x{t.migrations})" if t.migrations else ""
+            if t.slo:
+                att = "n/a" if t.slo_attainment is None \
+                    else f"{t.slo_attainment:.2f}"
+                extra += f" slo[{t.slo}]={att}"
             lines.append(
                 f"  {t.tenant_id}@p{t.partition}: {t.completed}/"
                 f"{t.submitted} done, {t.tokens_out} tok, "
@@ -492,9 +514,18 @@ class ServingRuntime:
                       for i in range(len(self.sessions))]
         self.planner = ex.OverlapPlanner()
         self._next_overlap_group = 0
+        # Metrics plane: one registry + one sink over every partition
+        # tracer (events carry partition tags, so one sink suffices).
+        self.metrics = None
+        self.metrics_sink = None
+        if spec.metrics:
+            from repro.runtime.metrics import MetricsRegistry, MetricsSink
+            self.metrics = MetricsRegistry()
+            self.metrics_sink = MetricsSink(self.metrics).attach(
+                *self.tracers)
         for tspec in spec.tenants:
             self.add_tenant(tspec.id, weight=tspec.weight,
-                            partition=tspec.partition)
+                            partition=tspec.partition, slo=tspec.slo)
 
     # -- construction helpers -----------------------------------------------
     @staticmethod
@@ -589,16 +620,19 @@ class ServingRuntime:
                    key=lambda i: (self._load(i), i))
 
     def add_tenant(self, tenant_id: str, *, weight: float = 1.0,
-                   policy=None, partition: Optional[int] = None) -> int:
+                   policy=None, partition: Optional[int] = None,
+                   slo=None) -> int:
         """Register a tenant on a partition (router-chosen unless
         ``partition`` pins one). Unlike the PR 4 router, registration is
         no longer forever: the migration loop may re-route the tenant
-        later. Returns the partition index."""
+        later. ``slo`` is an optional SLO class (spec string / dict /
+        :class:`~repro.runtime.scheduler.SLO`). Returns the partition
+        index."""
         if tenant_id in self.tenant_partition:
             raise ValueError(f"tenant {tenant_id!r} already registered")
         idx = self._route(weight) if partition is None else partition
         self.schedulers[idx].add_tenant(tenant_id, weight=weight,
-                                        policy=policy)
+                                        policy=policy, slo=slo)
         self.tenant_partition[tenant_id] = idx
         self._tenant_order.append(tenant_id)
         self.tracers[idx].record("route", tenant=tenant_id,
@@ -826,7 +860,7 @@ class ServingRuntime:
 
         src_sched.freeze(tenant_id)
         dst_t = dst_sched.add_tenant(tenant_id, weight=src_t.weight,
-                                     policy=src_t.policy)
+                                     policy=src_t.policy, slo=src_t.slo)
         # fair_quantum join rule: resume at no less than the target's
         # current virtual-time floor so the newcomer cannot monopolize
         # admissions, but keep its own served-work history
@@ -933,7 +967,7 @@ class ServingRuntime:
             rows.append(row)
             if contrib is not None:
                 turnarounds.append(contrib)
-        return PartitionedReport(
+        rep = PartitionedReport(
             placement=self.placement,
             admission="/".join(sorted({s.admission
                                        for s in self.schedulers})),
@@ -951,6 +985,10 @@ class ServingRuntime:
             migrations=sum(1 for m in self.migrations if m.done),
             policies=[self.policy_key(i)
                       for i in range(self.n_partitions)])
+        if self.metrics is not None:
+            from repro.runtime.metrics import observe_runtime
+            observe_runtime(self.metrics, self, rep)
+        return rep
 
 
 def run_serving(params, cfg, spec: Union[ServingSpec, Dict],

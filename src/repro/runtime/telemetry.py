@@ -29,6 +29,7 @@ from __future__ import annotations
 import dataclasses
 import threading
 import time
+import warnings
 from collections import deque
 from typing import Any, Dict, List, Optional, Sequence, Tuple
 
@@ -104,7 +105,26 @@ class Tracer:
         self._counts: Dict[str, int] = {}
         self._tenant_counts: Dict[Tuple[str, str], int] = {}
         self._ema: Dict[Tuple[int, int, int, str], float] = {}
+        self._dropped: Dict[str, int] = {}   # kind -> ring evictions
+        self._warned_drop = False
+        self._sinks: List[Any] = []          # duck-typed: on_event/on_drop
         self._lock = threading.Lock()
+
+    # -- sinks (the metrics plane subscribes here) --------------------------
+    def add_sink(self, sink) -> "Tracer":
+        """Subscribe a sink (duck-typed: ``on_event(ev)``, optionally
+        ``on_drop(kind)``) to every event folded into this tracer — the
+        seam :class:`repro.runtime.metrics.MetricsSink` attaches through.
+        Sinks run on the recording thread, outside the tracer lock."""
+        with self._lock:
+            if sink not in self._sinks:
+                self._sinks.append(sink)
+        return self
+
+    def remove_sink(self, sink) -> None:
+        with self._lock:
+            if sink in self._sinks:
+                self._sinks.remove(sink)
 
     # -- recording ----------------------------------------------------------
     def record(self, kind: str, **fields) -> Event:
@@ -116,9 +136,21 @@ class Tracer:
     def _ingest(self, ev: Event) -> None:
         """Fold one already-built event in: ring append + every counter,
         all under the lock (concurrent emitters — multi-partition steps,
-        ``run_async_dispatch`` threads — may interleave)."""
+        ``run_async_dispatch`` threads — may interleave). Eviction past
+        ``capacity`` is *counted* (per evicted kind) and warned about once:
+        the sample views silently narrowing to a truncated window while
+        the monotonic counters keep the true totals is exactly the
+        observability gap the dropped counters close."""
         with self._lock:
+            evicted = self._ring[0] if len(self._ring) == self.capacity \
+                else None
             self._ring.append(ev)
+            if evicted is not None:
+                self._dropped[evicted.kind] = \
+                    self._dropped.get(evicted.kind, 0) + 1
+            first_drop = evicted is not None and not self._warned_drop
+            if first_drop:
+                self._warned_drop = True
             self._counts[ev.kind] = self._counts.get(ev.kind, 0) + 1
             if ev.tenant:
                 tkey = (ev.kind, ev.tenant)
@@ -129,6 +161,18 @@ class Tracer:
                 prev = self._ema.get(key)
                 self._ema[key] = ev.wall_s if prev is None else \
                     (1 - self.ema_alpha) * prev + self.ema_alpha * ev.wall_s
+            sinks = list(self._sinks)
+        if first_drop:
+            warnings.warn(
+                f"Tracer(capacity={self.capacity}) began evicting events: "
+                "sample views (tenant_latencies/percentiles, occupancy "
+                "histogram, overlap_groups) now cover a truncated window; "
+                "monotonic counts stay exact — see Tracer.dropped()",
+                RuntimeWarning, stacklevel=4)
+        for sink in sinks:
+            if evicted is not None and hasattr(sink, "on_drop"):
+                sink.on_drop(evicted.kind)
+            sink.on_event(ev)
 
     def record_matmul(self, m: int, k: int, n: int, *, precision: str = "",
                       backend: str = "", policy: str = "",
@@ -172,10 +216,25 @@ class Tracer:
             evs = list(self._ring)
         return evs if kind is None else [e for e in evs if e.kind == kind]
 
-    def counts(self) -> Dict[str, int]:
-        """Monotonic per-kind totals (exact even after ring eviction)."""
+    def counts(self, include_dropped: bool = False) -> Dict[str, int]:
+        """Monotonic per-kind totals (exact even after ring eviction).
+        With ``include_dropped`` the per-kind ring-eviction counters ride
+        along under ``"dropped.<kind>"`` keys, so one call exposes both
+        the true totals and how much of each kind the sample window has
+        lost."""
         with self._lock:
-            return dict(self._counts)
+            out = dict(self._counts)
+            if include_dropped:
+                for kind, n in self._dropped.items():
+                    out[f"dropped.{kind}"] = n
+            return out
+
+    def dropped(self) -> Dict[str, int]:
+        """Per-kind count of events evicted from the ring (the gap
+        between :meth:`counts` and what the sample views can still see).
+        Empty until the tracer overflows ``capacity``."""
+        with self._lock:
+            return dict(self._dropped)
 
     def __len__(self) -> int:
         with self._lock:
@@ -187,12 +246,17 @@ class Tracer:
         with self._lock:
             return dict(self._ema)
 
-    def occupancy_histogram(self, n_cores: int = 256,
+    def occupancy_histogram(self, n_cores: Optional[int] = None,
                             bins: Sequence[float] = (0.25, 0.5, 1.0, 2.0,
                                                      4.0, 8.0)
                             ) -> Dict[str, int]:
         """Histogram of grid-tile *fill* (tiles / cores) over the observed
-        matmul/resolve events — the §5 occupancy axis as seen at runtime."""
+        matmul/resolve events — the §5 occupancy axis as seen at runtime.
+        ``n_cores`` defaults to the *detected* hardware core count
+        (:func:`repro.core.concurrency.detect_core_count`), so fills are
+        hardware-correct without every caller remembering to pass it."""
+        if n_cores is None:
+            n_cores = cc.detect_core_count()
         edges = list(bins)
         labels = [f"<{edges[0]}"] + \
             [f"{lo}-{hi}" for lo, hi in zip(edges, edges[1:])] + \
@@ -206,13 +270,16 @@ class Tracer:
             hist[labels[idx]] += 1
         return hist
 
-    def mean_fill(self, n_cores: int = 256) -> Optional[float]:
+    def mean_fill(self, n_cores: Optional[int] = None) -> Optional[float]:
         """Mean grid-tile fill (tiles / cores) over the retained
         matmul/resolve events; ``None`` with no samples. The scalar form
         of :meth:`occupancy_histogram` that :class:`~repro.runtime.
         scheduler.AdaptiveQuota` consumes as its second signal: when the
         observed fill collapses, the §6 guidance is to *shrink* the
-        concurrency budget, not just rebalance it."""
+        concurrency budget, not just rebalance it. ``n_cores`` defaults
+        to the detected hardware core count."""
+        if n_cores is None:
+            n_cores = cc.detect_core_count()
         fills = [ev.grid_tiles / max(1, n_cores) for ev in self.events()
                  if ev.kind in ("matmul", "resolve") and ev.grid_tiles]
         return float(np.mean(fills)) if fills else None
@@ -317,11 +384,15 @@ class Tracer:
             with tr._lock:
                 counts = dict(tr._counts)
                 tcounts = dict(tr._tenant_counts)
+                dropped = dict(tr._dropped)
             for k, v in counts.items():
                 merged._counts[k] = merged._counts.get(k, 0) + v
             for k, v in tcounts.items():
                 merged._tenant_counts[k] = \
                     merged._tenant_counts.get(k, 0) + v
+            for k, v in dropped.items():
+                merged._dropped[k] = merged._dropped.get(k, 0) + v
+        merged._warned_drop = True       # sources already warned
         return merged
 
     def overlap_groups(self) -> Dict[int, List[Event]]:
@@ -373,10 +444,16 @@ class Tracer:
     def to_dicts(self) -> List[Dict[str, Any]]:
         return [e.to_dict() for e in self.events()]
 
-    def summary(self, n_cores: int = 256) -> str:
+    def summary(self, n_cores: Optional[int] = None) -> str:
+        if n_cores is None:
+            n_cores = cc.detect_core_count()
         counts = self.counts()
         lines = ["[telemetry] events: " + (", ".join(
             f"{k}={v}" for k, v in sorted(counts.items())) or "none")]
+        dropped = self.dropped()
+        if dropped:
+            lines.append("  dropped (ring evictions): " + ", ".join(
+                f"{k}={v}" for k, v in sorted(dropped.items())))
         hist = self.occupancy_histogram(n_cores=n_cores)
         if any(hist.values()):
             lines.append("  occupancy fill (×cores): " + " ".join(

@@ -1,0 +1,387 @@
+"""Observability plane: metrics registry, Tracer→metrics sink,
+Chrome-trace export, SLO attainment arithmetic, and the BENCH trajectory
+gate.
+
+The accounting contracts pinned here are the plane's whole value:
+counter instruments agree *exactly* with the Tracer's monotonic per-kind
+counts even past ring eviction, the exported trace renders planner-paired
+work as genuinely overlapping slices on distinct lane tracks, and the
+trajectory gate fails (non-zero) on an injected 20% tokens/step
+regression while passing an unchanged run.
+"""
+import json
+
+import pytest
+
+from repro.runtime import telemetry, traceview
+from repro.runtime.metrics import (
+    Histogram, MetricsRegistry, MetricsSink, observe_runtime)
+from repro.runtime.scheduler import SLO, attainment_from_tracer
+
+from benchmarks import trajectory
+
+
+# ---------------------------------------------------------------------------
+# Metrics instruments
+# ---------------------------------------------------------------------------
+
+def test_counter_is_monotonic_and_labeled():
+    r = MetricsRegistry()
+    c = r.counter("repro_things_total", "things")
+    c.inc(tenant="a")
+    c.inc(2, tenant="b")
+    assert c.value(tenant="a") == 1
+    assert c.value(tenant="b") == 2
+    assert c.value(tenant="missing") == 0
+    with pytest.raises(ValueError):
+        c.inc(-1, tenant="a")
+
+
+def test_histogram_cumulative_bucket_math():
+    h = Histogram("h", buckets=(1.0, 2.0, 4.0))
+    for v in (0.5, 1.5, 3.0, 100.0):
+        h.observe(v)
+    s = h.value()
+    # cumulative Prometheus semantics: bucket i counts observations <= bound
+    assert s["bucket_counts"] == [1, 2, 3]
+    assert s["count"] == 4                       # +Inf bucket
+    assert s["sum"] == 105.0
+    snap = h.snapshot()["total"]
+    assert snap["per_bin"] == [1, 1, 1, 1]       # derived non-cumulative
+    assert snap["mean"] == pytest.approx(105.0 / 4)
+
+
+def test_histogram_rejects_unsorted_buckets():
+    with pytest.raises(ValueError):
+        Histogram("h", buckets=(2.0, 1.0))
+    with pytest.raises(ValueError):
+        Histogram("h", buckets=())
+
+
+def test_registry_get_or_create_and_kind_mismatch():
+    r = MetricsRegistry()
+    c1 = r.counter("repro_x_total")
+    assert r.counter("repro_x_total") is c1      # same instrument back
+    with pytest.raises(ValueError):
+        r.gauge("repro_x_total")                 # kind flip is a bug
+
+
+def test_prometheus_exposition_golden_text():
+    r = MetricsRegistry()
+    c = r.counter("repro_requests_total", "completed requests per tenant")
+    c.inc(tenant="a")
+    c.inc(2, tenant="b")
+    r.gauge("repro_pages_in_use").set(5, partition="0")
+    h = r.histogram("repro_lat", buckets=(0.5, 1.0))
+    h.observe(0.25)
+    h.observe(0.75)
+    assert r.to_prometheus() == """\
+# TYPE repro_lat histogram
+repro_lat_bucket{le="0.5"} 1
+repro_lat_bucket{le="1"} 2
+repro_lat_bucket{le="+Inf"} 2
+repro_lat_sum 1
+repro_lat_count 2
+# TYPE repro_pages_in_use gauge
+repro_pages_in_use{partition="0"} 5
+# HELP repro_requests_total completed requests per tenant
+# TYPE repro_requests_total counter
+repro_requests_total{tenant="a"} 1
+repro_requests_total{tenant="b"} 2
+"""
+
+
+def test_registry_save_picks_format_by_extension(tmp_path):
+    r = MetricsRegistry()
+    r.counter("repro_x_total").inc()
+    prom = tmp_path / "m.prom"
+    js = tmp_path / "m.json"
+    r.save(str(prom))
+    r.save(str(js))
+    assert "# TYPE repro_x_total counter" in prom.read_text()
+    doc = json.loads(js.read_text())
+    assert doc["repro_x_total"]["series"]["total"] == 1
+
+
+# ---------------------------------------------------------------------------
+# Tracer -> metrics sink
+# ---------------------------------------------------------------------------
+
+def test_sink_counters_agree_with_tracer_counts_past_eviction():
+    """The core accounting contract: events_total{kind} tracks the same
+    stream as Tracer.counts(), so both stay exact after the ring has
+    evicted most of the window — and evictions land in the dropped
+    counter."""
+    tr = telemetry.Tracer(capacity=4)
+    sink = MetricsSink().attach(tr)
+    with pytest.warns(RuntimeWarning):
+        for i in range(10):
+            tr.record_matmul(128, 128, 128, wall_s=0.001)
+        for _ in range(3):
+            tr.record_request("a", wall_s=0.01, tokens=2,
+                              turnaround_steps=3)
+    counts = tr.counts()
+    ev = sink.events
+    assert ev.value(kind="matmul") == counts["matmul"] == 10
+    assert ev.value(kind="request") == counts["request"] == 3
+    assert len(tr) == 4                          # ring only holds the tail
+    dropped = tr.dropped()
+    assert sum(dropped.values()) == 9            # 13 recorded, 4 retained
+    for kind, n in dropped.items():
+        assert sink.dropped.value(kind=kind) == n
+
+
+def test_sink_folds_requests_pages_and_latency():
+    tr = telemetry.Tracer(capacity=64, partition=1)
+    sink = MetricsSink().attach(tr)
+    tr.record("decode", m=2, k=64, n=64, wall_s=0.004)
+    tr.record_request("alpha", wall_s=0.02, tokens=8, turnaround_steps=5)
+    tr.record("admit", tenant="alpha")
+    tr.record("paging", meta={"phase": "alloc", "pages_in_use": 7,
+                              "utilization": 0.75, "fragmentation": 0.25})
+    assert sink.tokens.value(tenant="alpha") == 8
+    assert sink.requests.value(tenant="alpha") == 1
+    assert sink.admissions.value(tenant="alpha") == 1
+    lat = sink.decode_lat.value(partition="1")
+    assert lat["count"] == 1 and lat["sum"] == pytest.approx(0.004)
+    ta = sink.turnaround.value(tenant="alpha")
+    assert ta["count"] == 1
+    assert sink.pages_in_use.value(partition="1") == 7
+    assert sink.page_frag.value(partition="1") == pytest.approx(0.25)
+
+
+def test_sink_counts_each_migration_once():
+    """migrate events are recorded on BOTH endpoints' tracers for
+    provenance; the sink dedups by counting only the source partition's
+    copy."""
+    src = telemetry.Tracer(partition=0)
+    dst = telemetry.Tracer(partition=2)
+    sink = MetricsSink().attach(src, dst)
+    for tr in (src, dst):
+        tr.record_migrate("a", src=0, dst=2, phase="handoff",
+                          handoff_bytes=4096, uid=7)
+    assert sink.migrations.value(phase="handoff", src="0", dst="2") == 1
+    assert sink.handoff_bytes.value() == 4096
+    assert sink.events.value(kind="migrate") == 2   # raw stream still exact
+
+
+def test_sink_overlap_group_gauges():
+    tr = telemetry.Tracer()
+    sink = MetricsSink().attach(tr)
+    tr.record("decode", wall_s=0.010, lane="sparse", overlap_group=0)
+    assert sink.overlap_groups.value() == 0      # one member isn't a pair
+    tr.record("decode", wall_s=0.010, lane="dense", overlap_group=0)
+    assert sink.overlap_groups.value() == 1
+    # equal walls: serial/concurrent = 2x, efficiency = ideal
+    assert sink.overlap_speedup.value() == pytest.approx(2.0)
+
+
+# ---------------------------------------------------------------------------
+# SLO arithmetic
+# ---------------------------------------------------------------------------
+
+def test_slo_parse_spec_round_trip():
+    assert SLO.parse("latency:12").spec() == "latency:12"
+    assert SLO.parse("latency:0.05@wall_s").spec() == "latency:0.05@wall_s"
+    assert SLO.parse("throughput:1.5").spec() == "throughput:1.5"
+    assert SLO.parse("batch").target == 1.0      # default full completion
+    assert SLO.parse(None) is None
+    slo = SLO.parse({"kind": "latency", "target": 8})
+    assert SLO.parse(slo) is slo
+
+
+@pytest.mark.parametrize("bad", ["bogus:1", "latency", "latency:-2",
+                                 "latency:1@bogus_metric"])
+def test_slo_parse_rejects_malformed(bad):
+    with pytest.raises(ValueError):
+        SLO.parse(bad)
+
+
+def test_slo_latency_attainment_fraction_and_starvation():
+    slo = SLO("latency", 10)
+    assert slo.attainment(samples=(2, 4, 20), completed=3,
+                          submitted=3) == pytest.approx(2 / 3)
+    # demand but nothing finished: attainment is 0, not undefined
+    assert slo.attainment(submitted=3, completed=0) == 0.0
+    # no demand at all: no claim either way
+    assert slo.attainment(submitted=0) is None
+
+
+def test_slo_throughput_and_batch_classes():
+    assert SLO("throughput", 2.0).attainment(
+        tokens_out=10, steps=10, submitted=1) == pytest.approx(0.5)
+    assert SLO("throughput", 0.5).attainment(
+        tokens_out=10, steps=10, submitted=1) == 1.0   # capped
+    assert SLO("batch", 1.0).attainment(
+        completed=3, submitted=4) == pytest.approx(0.75)
+
+
+def test_attainment_from_tracer_survives_eviction():
+    """The telemetry-only path: demand from monotonic counters, samples
+    from the retained window."""
+    tr = telemetry.Tracer(capacity=8)
+    slo = SLO("latency", 6)
+    with pytest.warns(RuntimeWarning):
+        for i in range(20):
+            tr.record("admit", tenant="a")
+            tr.record_request("a", wall_s=0.01, tokens=1,
+                              turnaround_steps=4 if i % 2 else 8)
+    att = attainment_from_tracer(tr, "a", slo, steps=20)
+    # retained window alternates 8,4,... -> half meet the bound
+    assert att == pytest.approx(0.5)
+    assert attainment_from_tracer(tr, "ghost", slo, steps=20) is None
+    assert attainment_from_tracer(tr, "a", None, steps=20) is None
+
+
+# ---------------------------------------------------------------------------
+# Chrome-trace export
+# ---------------------------------------------------------------------------
+
+def _overlapping_tracer():
+    tr = telemetry.Tracer(partition=0)
+    # joined "now" with 10ms walls: slice starts rebase to ~the same
+    # instant, so the pair genuinely overlaps on two lane tracks
+    tr.record("decode", m=2, k=64, n=64, wall_s=0.010, lane="sparse",
+              overlap_group=0)
+    tr.record("decode", m=4, k=64, n=64, wall_s=0.010, lane="dense",
+              overlap_group=0)
+    tr.record_request("alpha", wall_s=0.02, tokens=8, turnaround_steps=5,
+                      uid=1)
+    return tr
+
+
+def test_chrome_trace_round_trip_and_overlap_geometry(tmp_path):
+    tr = _overlapping_tracer()
+    path = tmp_path / "trace.json"
+    traceview.export_chrome_trace(tr, str(path))
+    doc = traceview.load(str(path))              # valid JSON round-trip
+    summary = traceview.validate(doc)
+    assert summary["overlap_groups"] == 1
+    assert summary["overlap_groups_overlapping"] == 1
+    # the pair sits on distinct lane tracks of the same partition pid
+    slices = [e for e in doc["traceEvents"] if e["ph"] == "X"]
+    pair = [e for e in slices if e["args"].get("overlap_group") == 0]
+    assert len(pair) == 2
+    assert pair[0]["pid"] == pair[1]["pid"]
+    assert pair[0]["tid"] != pair[1]["tid"]
+    # per-tenant request span survives as an async b/e pair
+    spans = [e["ph"] for e in doc["traceEvents"] if e.get("cat") == "request"]
+    assert "b" in spans and "e" in spans
+
+
+def test_chrome_trace_migration_flow_events():
+    src = telemetry.Tracer(partition=0)
+    dst = telemetry.Tracer(partition=2)
+    for tr in (src, dst):
+        tr.record_migrate("a", src=0, dst=2, phase="handoff",
+                          handoff_bytes=4096, uid=7)
+    doc = traceview.to_chrome_trace(telemetry.Tracer.merge(src, dst))
+    flows = traceview.migration_flow_pairs(doc)
+    assert flows == [(1, 3)]                     # pid = partition + 1
+
+
+def test_chrome_trace_empty_tracer_is_still_valid():
+    doc = traceview.to_chrome_trace(telemetry.Tracer())
+    assert doc["traceEvents"] == []
+    assert traceview.validate(doc)["n_slices"] == 0
+
+
+# ---------------------------------------------------------------------------
+# BENCH trajectory gate
+# ---------------------------------------------------------------------------
+
+def _fig21_doc(tok_per_step=6.0, sha="abcdef123456"):
+    return {
+        "figure": "fig21_async_overlap",
+        "meta": {"figure": "fig21_async_overlap", "git_sha": sha,
+                 "hardware_key": "test-c256"},
+        "serialized": {"tok_per_step": tok_per_step, "steps": 14},
+        "overlap": {"tok_per_step": tok_per_step * 1.05,
+                    "overlap_groups": 20},
+        "serving_speedup": 1.05,
+        "tokens_equal": 1,
+        "contention": {"speedup": 1.1, "serialized_wall_us": 100.0,
+                       "overlap_wall_us": 90.0},
+    }
+
+
+def _write(d, doc):
+    (d / "BENCH_fig21.json").write_text(json.dumps(doc))
+
+
+def test_trajectory_seed_then_check_passes(tmp_path):
+    _write(tmp_path, _fig21_doc())
+    store = str(tmp_path / "TRAJECTORY.json")
+    added = trajectory.append_runs(str(tmp_path), store)
+    assert len(added) == 1
+    assert added[0]["hardware_key"] == "test-c256"
+    assert trajectory.check(str(tmp_path), store) == 0
+    assert trajectory.main(["--check", "--dir", str(tmp_path),
+                            "--store", store]) == 0
+
+
+def test_trajectory_gates_injected_20pct_regression(tmp_path):
+    """The acceptance criterion: a 20% tokens/step loss must trip the
+    gate (tolerance band is 10%/15%), and the process exit is non-zero
+    so CI fails."""
+    _write(tmp_path, _fig21_doc(tok_per_step=6.0))
+    store = str(tmp_path / "TRAJECTORY.json")
+    trajectory.append_runs(str(tmp_path), store)
+    _write(tmp_path, _fig21_doc(tok_per_step=6.0 * 0.8, sha="feedface0000"))
+    assert trajectory.check(str(tmp_path), store) >= 2   # both arms sank
+    assert trajectory.main(["--check", "--dir", str(tmp_path),
+                            "--store", store]) == 1
+
+
+def test_trajectory_track_only_metrics_never_gate(tmp_path):
+    _write(tmp_path, _fig21_doc())
+    store = str(tmp_path / "TRAJECTORY.json")
+    trajectory.append_runs(str(tmp_path), store)
+    doc = _fig21_doc(sha="feedface0000")
+    doc["contention"]["serialized_wall_us"] = 1e9   # wall absolutes drift
+    _write(tmp_path, doc)
+    assert trajectory.check(str(tmp_path), store) == 0
+
+
+def test_trajectory_rerun_same_key_replaces_entry(tmp_path):
+    _write(tmp_path, _fig21_doc())
+    store = str(tmp_path / "TRAJECTORY.json")
+    trajectory.append_runs(str(tmp_path), store)
+    trajectory.append_runs(str(tmp_path), store)    # idempotent re-run
+    runs = trajectory.load_store(store)["runs"]
+    assert len(runs) == 1
+
+
+def test_trajectory_missing_baseline_records_only(tmp_path):
+    _write(tmp_path, _fig21_doc())
+    store = str(tmp_path / "TRAJECTORY.json")
+    # no store yet: nothing to compare against, but never a failure
+    assert trajectory.check(str(tmp_path), store) == 0
+
+
+def test_trajectory_ignores_trace_artifacts(tmp_path):
+    (tmp_path / "BENCH_fig21_trace.json").write_text("{}")
+    assert trajectory.bench_files(str(tmp_path)) == []
+
+
+# ---------------------------------------------------------------------------
+# Committed baselines stay gateable
+# ---------------------------------------------------------------------------
+
+def test_committed_bench_artifacts_cover_all_gated_metrics():
+    """Every gated metric in the tables must be extractable from the
+    committed BENCH files — a silently-None metric would make the CI
+    gate vacuous for that figure."""
+    from pathlib import Path
+    root = Path(__file__).resolve().parents[1]
+    for figure, fname in (("fig20_paged_serving", "BENCH_fig20.json"),
+                          ("fig21_async_overlap", "BENCH_fig21.json")):
+        path = root / fname
+        if not path.exists():
+            pytest.skip(f"{fname} not committed")
+        doc = json.loads(path.read_text())
+        vals = trajectory.metric_values(figure, doc)
+        for m in trajectory.FIGURE_METRICS[figure]:
+            if m.gate:
+                assert m.name in vals, (figure, m.name)
+        assert doc.get("meta", {}).get("figure") == figure
