@@ -5,10 +5,18 @@ identical decode workloads share one model through the multi-tenant
 StreamScheduler; a shared FIFO queue collapses per-tenant fairness while
 the credit-based ``fair_quantum`` admission restores it at the same
 aggregate throughput. Overlap efficiency compares against each tenant
-served alone (serial), exactly like the raw-matmul stream runs."""
+served alone (serial), exactly like the raw-matmul stream runs.
+
+Writes ``BENCH_fig17.json`` so ``benchmarks/trajectory.py`` gates the
+fair_quantum fairness restoration (the figure's claim) across PRs; the
+FIFO collapse and wall percentiles ride along untracked."""
+import json
+from pathlib import Path
+
 import jax
 import numpy as np
 
+from benchmarks.common import stamp
 from repro.configs import get_reduced
 from repro.core import concurrency as cc
 from repro.core.characterization import Record
@@ -16,6 +24,8 @@ from repro.models import init_params
 from repro.models.layers import RuntimeCfg
 from repro.runtime.scheduler import run_tenants
 from repro.runtime.serve_loop import Request, ServeSession
+
+BENCH_PATH = Path(__file__).resolve().parent.parent / "BENCH_fig17.json"
 
 N_TENANTS = 4
 REQS_PER_TENANT = 2
@@ -59,6 +69,7 @@ def run():
     serial_total = sum(solo(t).wall_s for t in range(N_TENANTS))
 
     out = []
+    admissions = {}
     for admission in ("fifo", "round_robin", "fair_quantum"):
         rep = run_tenants(
             session(),
@@ -66,17 +77,24 @@ def run():
              for t in range(N_TENANTS)},
             admission=admission)
         p99 = max(t.p99_latency_s for t in rep.tenants)
+        derived = {
+            "fairness": round(rep.fairness, 4),
+            "cv": round(rep.cv, 4),
+            "overlap_eff_steps": round(rep.overlap_efficiency, 4),
+            "overlap_eff_wall": round(cc.overlap_efficiency(
+                serial_total, rep.wall_s, N_TENANTS), 4),
+            "p99_latency_ms": round(p99 * 1e3, 2),
+            "tokens": rep.tokens_out,
+            "steps": rep.steps,
+            "slots": SLOTS}
+        admissions[admission] = derived
         out.append(Record(
             name=f"fig17/serving/{admission}/tenants={N_TENANTS}",
             us_per_call=rep.wall_s * 1e6,
-            derived={
-                "fairness": round(rep.fairness, 4),
-                "cv": round(rep.cv, 4),
-                "overlap_eff_steps": round(rep.overlap_efficiency, 4),
-                "overlap_eff_wall": round(cc.overlap_efficiency(
-                    serial_total, rep.wall_s, N_TENANTS), 4),
-                "p99_latency_ms": round(p99 * 1e3, 2),
-                "tokens": rep.tokens_out,
-                "steps": rep.steps,
-                "slots": SLOTS}))
+            derived=derived))
+    summary = {"figure": "fig17_serving_fairness",
+               "n_tenants": N_TENANTS, "slots": SLOTS,
+               "admissions": admissions}
+    stamp(summary, "fig17_serving_fairness")
+    BENCH_PATH.write_text(json.dumps(summary, indent=2) + "\n")
     return out

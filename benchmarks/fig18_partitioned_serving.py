@@ -14,16 +14,26 @@ scheduler steps — partitions step in lockstep, so fewer steps at equal
 tokens means real concurrency) and wall tok/s (rides along for real
 hardware; on a single shared CPU device the logical partitions
 time-multiplex it).
+
+Writes ``BENCH_fig18.json`` so ``benchmarks/trajectory.py`` gates the
+headline cell (2 partitions, load_aware, fair_quantum/adaptive):
+tokens-per-step must not drop and its fairness restoration must hold.
 """
+import json
+from pathlib import Path
+
 import jax
 import numpy as np
 
+from benchmarks.common import stamp
 from repro.configs import get_reduced
 from repro.core.characterization import Record
 from repro.models import init_params
 from repro.models.layers import RuntimeCfg
 from repro.runtime.partition import run_partitioned
 from repro.runtime.serve_loop import Request
+
+BENCH_PATH = Path(__file__).resolve().parent.parent / "BENCH_fig18.json"
 
 N_TENANTS = 4
 REQS_PER_TENANT = 2
@@ -78,24 +88,32 @@ def run():
           "cells (placement variants that route identically on this "
           "balanced workload are cut)")
     out = []
+    cells = {}
     for (n_parts, placement, admission, quota) in SWEEP:
         rep = go(n_parts, placement, admission, quota)
         p99 = max((t.p99_latency_s for part in rep.partitions
                    for t in part.tenants), default=0.0)
+        derived = {
+            "fairness": round(rep.fairness, 4),
+            "cv": round(rep.cv, 4),
+            "tokens": rep.tokens_out,
+            "steps": rep.steps,
+            "tok_per_step": round(rep.tokens_out
+                                  / max(1, rep.steps), 3),
+            "tok_per_s": round(rep.tokens_out
+                               / max(rep.wall_s, 1e-9), 1),
+            "p99_latency_ms": round(p99 * 1e3, 2),
+            "partitions": n_parts,
+            "slots_per_partition": SLOTS}
+        cells[f"p{n_parts}-{placement}-{admission}-{quota}"] = derived
         out.append(Record(
             name=f"fig18/serving/p{n_parts}/{placement}/"
                  f"{admission}-{quota}",
             us_per_call=rep.wall_s * 1e6,
-            derived={
-                "fairness": round(rep.fairness, 4),
-                "cv": round(rep.cv, 4),
-                "tokens": rep.tokens_out,
-                "steps": rep.steps,
-                "tok_per_step": round(rep.tokens_out
-                                      / max(1, rep.steps), 3),
-                "tok_per_s": round(rep.tokens_out
-                                   / max(rep.wall_s, 1e-9), 1),
-                "p99_latency_ms": round(p99 * 1e3, 2),
-                "partitions": n_parts,
-                "slots_per_partition": SLOTS}))
+            derived=derived))
+    summary = {"figure": "fig18_partitioned_serving",
+               "n_tenants": N_TENANTS, "slots_per_partition": SLOTS,
+               "cells": cells}
+    stamp(summary, "fig18_partitioned_serving")
+    BENCH_PATH.write_text(json.dumps(summary, indent=2) + "\n")
     return out

@@ -26,10 +26,18 @@ the flood source's self-queued turnaround is reported separately, as in
 the fig18 adaptive-quota study); aggregate tokens/step ≥ the static
 baseline. Step-domain numbers are deterministic; wall tok/s rides along
 (on real hardware the fp8/sparse24 partition also wins wall-clock).
+
+Writes ``BENCH_fig19.json`` so ``benchmarks/trajectory.py`` gates the
+handoff behavior across PRs: migrations keep firing, the crossed-stream
+token equality holds, and victim fairness / tokens-per-step do not slip.
 """
+import json
+from pathlib import Path
+
 import jax
 import numpy as np
 
+from benchmarks.common import stamp
 from repro.configs import get_reduced
 from repro.core import execution as ex
 from repro.core.characterization import Record
@@ -39,6 +47,8 @@ from repro.models.layers import RuntimeCfg
 from repro.runtime.serve_loop import Request, ServeSession
 from repro.runtime.server import (
     MigrationSpec, PartitionSpec, ServingRuntime, ServingSpec)
+
+BENCH_PATH = Path(__file__).resolve().parent.parent / "BENCH_fig19.json"
 
 RT = RuntimeCfg(ssm_chunk=16)
 SLOTS = 2
@@ -155,17 +165,24 @@ def run():
             "policies": "|".join(p or "ambient" for p in rep.policies),
         }
 
+    equality = {**{f"{t}_equal": int(v) for t, v in equal.items()},
+                "all_equal": int(all(equal.values())),
+                "hetero_policies":
+                    int(any("fp8" in p for _, p in decode_pols)
+                        and any("bf16" in p for _, p in decode_pols))}
+    summary = {"figure": "fig19_migration",
+               "static": derived(static, static_rt),
+               "runtime": derived(live, live_rt),
+               "equality": equality}
+    stamp(summary, "fig19_migration")
+    BENCH_PATH.write_text(json.dumps(summary, indent=2) + "\n")
+
     out = [
         Record(name="fig19/migration/static", us_per_call=static.wall_s
                * 1e6, derived=derived(static, static_rt)),
         Record(name="fig19/migration/runtime", us_per_call=live.wall_s
                * 1e6, derived=derived(live, live_rt)),
         Record(name="fig19/migration/equality", us_per_call=0.0,
-               derived={**{f"{t}_equal": int(v) for t, v in equal.items()},
-                        "all_equal": int(all(equal.values())),
-                        "hetero_policies":
-                            int(any("fp8" in p for _, p in decode_pols)
-                                and any("bf16" in p
-                                        for _, p in decode_pols))}),
+               derived=equality),
     ]
     return out

@@ -1,0 +1,208 @@
+"""Fig 22 (beyond-paper) — speculative multi-token decoding:
+FP8/sparse24 draft + bf16 verify, greedy-exact.
+
+The paper's FP8 and 2:4-sparsity case studies price the *kernels*; this
+figure prices the *execution structure* that converts cheap low-precision
+compute into end-to-end serving throughput without touching output
+quality. A draft chain proposes ``k - 1`` tokens under an fp8 (or
+``fp8:sparse24``) execution policy, one batched bf16 verify pass scores
+all ``k`` candidate positions, and the longest argmax-matching prefix
+commits — so every arm below is token-for-token identical to plain
+greedy decode (asserted in-benchmark), and the only thing speculation
+changes is how many exact tokens land per scheduler step.
+
+Sweep: ``k ∈ {1, 2, 4}`` × draft policy ∈ {fp8, fp8:sparse24} on an
+accept-friendly (repetitive-prompt) workload, plus one random-prompt arm
+that shows what acceptance does on a draft-hostile stream (tracked, not
+asserted). ``k = 1`` is the kill switch — drafting disabled, the plain
+decode path — and is the baseline of the headline assert:
+
+* every arm's tokens == plain greedy tokens (``tokens_equal``);
+* best-arm effective tokens/step ≥ 1.2× the k=1 baseline;
+* per-tenant acceptance rate > 0 on every drafting arm.
+
+Sessions run *paged* (page_size 8) so the sweep also exercises the
+speculative page growth (k candidate positions per step) and post-verify
+trim path. Writes ``BENCH_fig22.json`` (third perf-trajectory point
+after fig20/fig21); CI gates acceptance rate and effective tokens/step
+via ``benchmarks/trajectory.py``.
+"""
+import json
+from pathlib import Path
+
+import jax
+import numpy as np
+
+from benchmarks.common import stamp
+from repro.configs import get_reduced
+from repro.core.characterization import Record
+from repro.models import init_params
+from repro.models.layers import RuntimeCfg
+from repro.runtime.serve_loop import Request
+from repro.runtime.server import PartitionSpec, ServingRuntime, ServingSpec
+
+RT = RuntimeCfg(ssm_chunk=16)
+SLOTS = 2
+MAX_LEN = 64
+PAGE = 8
+MAX_NEW = 16
+REQS_PER_TENANT = 2
+TENANTS = ("t0", "t1")
+
+# (arm name, SpecDecodeSpec as dict / int / None)
+ARMS = (
+    ("plain", None),                     # speculative machinery absent
+    ("k1", 1),                           # kill switch: drafting disabled
+    ("k2_fp8", {"k": 2, "draft_policy": "fp8"}),
+    ("k4_fp8", {"k": 4, "draft_policy": "fp8"}),
+    ("k2_fp8_sp24", {"k": 2, "draft_policy": "fp8:sparse24"}),
+    ("k4_fp8_sp24", {"k": 4, "draft_policy": "fp8:sparse24"}),
+)
+HEADLINE = "k4_fp8"
+BASELINE = "k1"
+
+BENCH_PATH = Path(__file__).resolve().parent.parent / "BENCH_fig22.json"
+
+
+def _workload(cfg, accept_friendly: bool):
+    """tenant -> [Request]. The accept-friendly stream repeats a short
+    token pattern — the attractor the greedy model locks onto, which the
+    fp8 draft then predicts — while the hostile stream is uniform-random
+    (the draft disagrees with bf16 argmax near ties)."""
+    rng = np.random.default_rng(0)
+    out = {}
+    for i, t in enumerate(TENANTS):
+        reqs = []
+        for j in range(REQS_PER_TENANT):
+            if accept_friendly:
+                a, b = 5 + 2 * i, 9 + 2 * i
+                prompt = np.array([a, b] * 4, np.int32)
+            else:
+                prompt = rng.integers(0, cfg.vocab_size, 8).astype(np.int32)
+            reqs.append(Request(uid=100 * i + j, prompt=prompt,
+                                max_new=MAX_NEW, tenant=t))
+        out[t] = reqs
+    return out
+
+
+def _run_arm(params, cfg, speculative, accept_friendly=True):
+    spec = ServingSpec(partitions=(PartitionSpec(),), batch_slots=SLOTS,
+                       max_len=MAX_LEN, paged=True, page_size=PAGE,
+                       speculative=speculative)
+    runtime = ServingRuntime(params, cfg, spec, rt=RT)
+    for t in TENANTS:
+        runtime.add_tenant(t)
+    for t, reqs in _workload(cfg, accept_friendly).items():
+        for req in reqs:
+            runtime.submit(t, req)
+    runtime.drain(max_steps=10_000)
+    rep = runtime.report()
+    toks = {r.uid: list(r.out)
+            for sess in runtime.sessions for r in sess.completed}
+    return rep, toks
+
+
+def _arm_summary(rep):
+    tenants = {}
+    for row in rep.tenants:
+        tenants[row.tenant_id] = {
+            "acceptance_rate": row.acceptance_rate,
+            "effective_tokens_per_step": row.effective_tokens_per_step,
+            "spec_steps": row.spec_steps,
+            "spec_drafted": row.spec_drafted,
+            "spec_accepted": row.spec_accepted,
+        }
+    drafted = sum(r.spec_drafted for r in rep.tenants)
+    accepted = sum(r.spec_accepted for r in rep.tenants)
+    return {
+        "steps": rep.steps,
+        "tokens": rep.tokens_out,
+        # step-domain throughput: deterministic (greedy tokens over
+        # lockstep scheduler steps), the quantity the 1.2x headline gates
+        "tok_per_step": round(rep.tokens_out / max(1, rep.steps), 4),
+        "acceptance_rate": round(accepted / drafted, 4) if drafted
+        else None,
+        "wall_s": round(rep.wall_s, 4),
+        "tenants": tenants,
+    }
+
+
+def run():
+    cfg = get_reduced("llama3-8b")
+    params = init_params(jax.random.PRNGKey(0), cfg)
+
+    # untimed warmup: the plain arm compiles prefill + decode once; each
+    # speculative arm then only adds its own draft/verify traces
+    _run_arm(params, cfg, None)
+
+    arms = {}
+    toks = {}
+    for name, spec in ARMS:
+        rep, tk = _run_arm(params, cfg, spec)
+        arms[name] = _arm_summary(rep)
+        toks[name] = tk
+
+    # exactness contract: every arm, drafting or not, emits the plain
+    # greedy stream token-for-token
+    for name in arms:
+        assert toks[name] == toks["plain"], \
+            f"{name} arm diverged from plain greedy decode"
+    for name, spec in ARMS:
+        if name in ("plain", BASELINE):
+            continue
+        acc = arms[name]["acceptance_rate"]
+        assert acc is not None and acc > 0, \
+            f"{name}: no drafts accepted (acceptance_rate={acc})"
+
+    base = arms[BASELINE]["tok_per_step"]
+    head = arms[HEADLINE]["tok_per_step"]
+    eff_speedup = head / max(base, 1e-9)
+    assert eff_speedup >= 1.2, \
+        f"{HEADLINE} effective tokens/step {head:.3f} < 1.2x the " \
+        f"{BASELINE} baseline {base:.3f} (ratio {eff_speedup:.3f})"
+
+    # draft-hostile stream: same sweep point, random prompts — reported
+    # so the trajectory shows what acceptance-rate collapse looks like
+    hostile_rep, hostile_toks = _run_arm(params, cfg,
+                                         {"k": 4, "draft_policy": "fp8"},
+                                         accept_friendly=False)
+    _, hostile_plain = _run_arm(params, cfg, None, accept_friendly=False)
+    assert hostile_toks == hostile_plain, \
+        "hostile-workload speculative arm diverged from plain greedy"
+    hostile = _arm_summary(hostile_rep)
+
+    summary = {
+        "figure": "fig22_speculative",
+        "workload": {"tenants": len(TENANTS),
+                     "reqs_per_tenant": REQS_PER_TENANT,
+                     "max_new": MAX_NEW, "paged": True, "page_size": PAGE},
+        "arms": arms,
+        "hostile_k4_fp8": hostile,
+        "effective_speedup": round(eff_speedup, 4),
+        "headline_arm": HEADLINE,
+        "baseline_arm": BASELINE,
+        "tokens_equal": 1,
+    }
+    stamp(summary, "fig22_speculative")
+    BENCH_PATH.write_text(json.dumps(summary, indent=2) + "\n")
+
+    out = []
+    for name, _ in ARMS:
+        a = arms[name]
+        out.append(Record(
+            name=f"fig22/speculative/{name}",
+            us_per_call=a["wall_s"] * 1e6,
+            derived={"steps": a["steps"], "tokens": a["tokens"],
+                     "tok_per_step": a["tok_per_step"],
+                     "acceptance_rate": a["acceptance_rate"]}))
+    out.append(Record(
+        name="fig22/speculative/hostile_k4_fp8",
+        us_per_call=hostile["wall_s"] * 1e6,
+        derived={"steps": hostile["steps"], "tokens": hostile["tokens"],
+                 "tok_per_step": hostile["tok_per_step"],
+                 "acceptance_rate": hostile["acceptance_rate"]}))
+    out.append(Record(
+        name="fig22/equality", us_per_call=0.0,
+        derived={"tokens_equal": 1,
+                 "effective_speedup": round(eff_speedup, 4)}))
+    return out

@@ -39,6 +39,7 @@ MODULES = [
     "fig19_migration",
     "fig20_paged_serving",
     "fig21_async_overlap",
+    "fig22_speculative",
     "roofline_report",
 ]
 

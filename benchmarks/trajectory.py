@@ -92,6 +92,48 @@ def _max_paged_handoff(doc: Dict[str, Any]) -> float:
 
 
 FIGURE_METRICS: Dict[str, Tuple[Metric, ...]] = {
+    # fig17: admission fairness. fair_quantum's restoration is the claim
+    # (tight band); tokens/steps are deterministic greedy counts; the FIFO
+    # collapse and wall p99 are reported but never gate.
+    "fig17_serving_fairness": (
+        Metric("admissions.fair_quantum.fairness", tol=0.05),
+        Metric("admissions.fair_quantum.overlap_eff_steps", tol=0.10),
+        Metric("admissions.fair_quantum.tokens", tol=0.0),
+        Metric("admissions.fifo.fairness", gate=False),
+        Metric("admissions.fair_quantum.p99_latency_ms",
+               direction="lower", gate=False),
+    ),
+    # fig18: partitioned serving. The headline cell (2 partitions,
+    # load_aware placement, fair_quantum/adaptive) must keep its
+    # step-domain throughput and fairness; the 1-partition FIFO floor and
+    # wall throughput ride along.
+    "fig18_partitioned_serving": (
+        Metric("fig18_tok_per_step",
+               path="cells.p2-load_aware-fair_quantum-adaptive"
+                    ".tok_per_step", tol=0.10),
+        Metric("fig18_fairness",
+               path="cells.p2-load_aware-fair_quantum-adaptive.fairness",
+               tol=0.05),
+        Metric("fig18_tokens",
+               path="cells.p2-load_aware-fair_quantum-adaptive.tokens",
+               tol=0.0),
+        Metric("fig18_fifo_fairness",
+               path="cells.p1-packed-fifo-static.fairness", gate=False),
+        Metric("fig18_tok_per_s",
+               path="cells.p2-load_aware-fair_quantum-adaptive.tok_per_s",
+               gate=False),
+    ),
+    # fig19: live migration. The crossed-stream equality and the
+    # migration count are the handoff bands; victim fairness and
+    # step-domain throughput gate on the runtime arm.
+    "fig19_migration": (
+        Metric("equality.all_equal", tol=0.0),
+        Metric("runtime.migrations", tol=0.5),
+        Metric("runtime.fairness_victims", tol=0.05),
+        Metric("runtime.tok_per_step", tol=0.10),
+        Metric("runtime.handoffs", gate=False),
+        Metric("runtime.tok_per_s", gate=False),
+    ),
     # fig20: paged serving density. tokens_per_step / density / fairness /
     # handoff bytes are deterministic (token counts, page tables); step
     # wall percentiles are runner-dependent -> track only.
@@ -122,6 +164,25 @@ FIGURE_METRICS: Dict[str, Tuple[Metric, ...]] = {
                gate=False),
         Metric("contention.overlap_wall_us", direction="lower",
                gate=False),
+    ),
+    # fig22: speculative decoding. Everything gated is step-domain
+    # deterministic: greedy tokens over lockstep steps. tokens_equal is
+    # the exactness contract (zero tolerance); acceptance rate and
+    # effective tokens/step are the figure's whole claim; the hostile-
+    # workload acceptance is tracked so draft-quality drift is visible.
+    "fig22_speculative": (
+        Metric("tokens_equal", tol=0.0),
+        Metric("effective_speedup", tol=0.10),
+        Metric("fig22_acceptance_rate",
+               path="arms.k4_fp8.acceptance_rate", tol=0.10),
+        Metric("fig22_tok_per_step",
+               path="arms.k4_fp8.tok_per_step", tol=0.10),
+        Metric("fig22_baseline_tok_per_step",
+               path="arms.k1.tok_per_step", tol=0.10),
+        Metric("fig22_sp24_acceptance_rate",
+               path="arms.k4_fp8_sp24.acceptance_rate", tol=0.20),
+        Metric("fig22_hostile_acceptance_rate",
+               path="hostile_k4_fp8.acceptance_rate", gate=False),
     ),
 }
 

@@ -96,6 +96,7 @@ class PageAllocator:
         self.alloc_count = 0
         self.free_count = 0
         self.extend_count = 0
+        self.trim_count = 0
         self.oom_count = 0
         self.peak_pages_in_use = 0
 
@@ -200,6 +201,27 @@ class PageAllocator:
             self.free_count += 1
         return released
 
+    def trim_slot(self, slot: int, n_tokens: int) -> List[int]:
+        """Shrink ``slot``'s table back to what ``n_tokens`` committed
+        positions need, releasing the surplus tail pages (the inverse of
+        :meth:`extend_slot`; speculative decode over-grows for ``k``
+        candidate positions and trims to the accepted count after the
+        verify pass). The caller must already have scrubbed the released
+        rows — the jitted verify step scrubs every rejected write before
+        the host sees the accepted count, so the pages re-enter the free
+        list clean. Returns the released page ids."""
+        table = self._tables[slot]
+        keep = max(1, self.pages_for(n_tokens)) if table.pages else 0
+        if keep >= len(table.pages):
+            table.tokens = min(table.tokens, int(n_tokens))
+            return []
+        released = table.pages[keep:]
+        del table.pages[keep:]
+        table.tokens = min(table.tokens, int(n_tokens))
+        self._free.extend(reversed(released))
+        self.trim_count += 1
+        return released
+
     def note_tokens(self, slot: int, n_tokens: int) -> None:
         """Advance the slot's written-token count (utilization only)."""
         t = self._tables[slot]
@@ -246,6 +268,7 @@ class PageAllocator:
             "state_block_tokens": self.state_block_tokens * occupied,
             "allocs": self.alloc_count,
             "extends": self.extend_count,
+            "trims": self.trim_count,
             "frees": self.free_count,
             "oom_refusals": self.oom_count,
         }

@@ -1,0 +1,256 @@
+"""Speculative multi-token decoding: low-precision draft, exact verify.
+
+The paper's mixed-precision case study shows FP8 matrix cores (and 2:4
+structured sparsity) delivering large throughput headroom that only pays
+off when the surrounding *execution structure* exploits it. Draft-and-
+verify speculative decoding is that structure at the serving layer: a
+cheap **draft** pass proposes ``k - 1`` candidate tokens under an fp8 (or
+``fp8:sparse24``) :class:`~repro.core.execution.ExecutionPolicy`, then
+ONE batched bf16 **verify** pass (:func:`repro.models.transformer.
+multi_decode_step`) scores all ``k`` positions and accepts the longest
+prefix whose drafts match the verify argmaxes. Because step ``j`` of the
+verify runs the exact plain ``decode_step`` computation at position
+``pos + j``, the committed tokens are *provably identical* to plain
+greedy decode — acceptance only changes how many of them land per step.
+
+Division of labor:
+
+* this module — the :class:`SpecDecodeSpec` knob surface, the jitted
+  draft-chain builder (:func:`make_draft_step` — the draft policy is
+  baked into ``rt.policy`` via ``apply_policy``, so it holds regardless
+  of the caller's ambient policy scope), the verify wrapper
+  (:func:`make_verify_step`), and the online :class:`AdaptiveK`
+  controller (mirrors :class:`~repro.runtime.scheduler.AdaptiveQuota`:
+  per-tenant acceptance-rate EMAs re-derive the speculation depth every
+  ``interval`` steps; the floor ``k = 1`` disables drafting).
+* :mod:`repro.models.transformer` — the multi-token verify step and the
+  rejected-write cache rollback (dense mask-scrub / paged pool scrub /
+  recurrent-state snapshot select).
+* :mod:`repro.runtime.serve_loop` — dispatch: the draft runs on its own
+  :class:`~repro.core.concurrency.ExecutionLane` and the verify thunk
+  consumes the draft's *future* (an XLA data dependency — the host never
+  materializes draft tokens), so draft(n+1) can overlap verify(n).
+
+Exactness kill switch: speculation is greedy-only. A session with
+``temperature > 0`` refuses a ``SpecDecodeSpec`` outright, and ``k = 1``
+falls back to the *exact* plain decode path (same jitted fn, same rng
+stream) — the fig22 baseline arm.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Union
+
+import jax.numpy as jnp
+
+from repro.core import execution as ex
+
+__all__ = ["SpecDecodeSpec", "AdaptiveK", "make_draft_step",
+           "make_verify_step"]
+
+
+@dataclasses.dataclass(frozen=True)
+class SpecDecodeSpec:
+    """Speculative-decoding knobs (``ServeSession(speculative=...)``,
+    ``ServingSpec``/``PartitionSpec`` field ``speculative``).
+
+    ``k`` is the maximum tokens *committed* per decode step — one verify
+    token plus ``k - 1`` drafts — so ``k = 1`` means no drafting (the
+    plain decode path, bit-identical). ``draft_policy`` is the execution
+    policy spec the draft chain runs under (``"fp8"`` /
+    ``"fp8:sparse24"`` / any :func:`~repro.core.execution.parse_policy`
+    string, or an :class:`~repro.core.execution.ExecutionPolicy`).
+
+    ``adaptive=True`` enables the :class:`AdaptiveK` controller: every
+    ``interval`` speculative steps each tenant's acceptance-rate EMA
+    (smoothing ``ema_alpha``) moves its desired depth — ``>= grow_above``
+    grows by 1 toward ``k``, ``<= shrink_below`` shrinks by 1 toward the
+    floor of 1 — and the session actuates the minimum across tenants
+    sharing the batch.
+    """
+    k: int = 2
+    draft_policy: Union[str, ex.ExecutionPolicy] = "fp8"
+    adaptive: bool = False
+    ema_alpha: float = 0.3
+    interval: int = 8
+    grow_above: float = 0.7
+    shrink_below: float = 0.3
+
+    def __post_init__(self):
+        if self.k < 1:
+            raise ValueError(f"speculative k must be >= 1, got {self.k}")
+        if self.interval <= 0:
+            raise ValueError("adaptive interval must be positive")
+        if not (0.0 < self.ema_alpha <= 1.0):
+            raise ValueError("ema_alpha must be in (0, 1]")
+        if not (0.0 <= self.shrink_below <= self.grow_above <= 1.0):
+            raise ValueError("need 0 <= shrink_below <= grow_above <= 1")
+        self.resolved()                      # validate the policy spec now
+
+    def resolved(self) -> ex.ExecutionPolicy:
+        """The draft policy as an :class:`ExecutionPolicy`."""
+        if isinstance(self.draft_policy, ex.ExecutionPolicy):
+            return self.draft_policy
+        return ex.parse_policy(self.draft_policy)
+
+    def spec_key(self) -> str:
+        """Round-trippable draft-policy string (jit cache-key component)."""
+        return self.resolved().full_spec()
+
+    def to_dict(self) -> Dict[str, Any]:
+        d = dataclasses.asdict(self)
+        d["draft_policy"] = self.spec_key()
+        return d
+
+    @classmethod
+    def from_any(cls, v: Union[None, int, Dict[str, Any], "SpecDecodeSpec"]
+                 ) -> Optional["SpecDecodeSpec"]:
+        """``None`` / int (k shorthand) / dict / instance →
+        ``Optional[SpecDecodeSpec]``."""
+        if v is None or isinstance(v, SpecDecodeSpec):
+            return v
+        if isinstance(v, bool):
+            raise TypeError("speculative must be a k (int), dict, or "
+                            "SpecDecodeSpec — not a bool")
+        if isinstance(v, int):
+            return cls(k=v)
+        if isinstance(v, dict):
+            known = {f.name for f in dataclasses.fields(cls)}
+            unknown = set(v) - known
+            if unknown:
+                raise ValueError(f"unknown SpecDecodeSpec field(s) "
+                                 f"{sorted(unknown)}; known: {sorted(known)}")
+            return cls(**v)
+        raise TypeError(f"speculative spec {v!r} is not None/int/dict/"
+                        "SpecDecodeSpec")
+
+
+# ---------------------------------------------------------------------------
+# Jitted step builders (consumed through serve_loop._cached_jit)
+# ---------------------------------------------------------------------------
+
+def make_draft_step(cfg, rt, draft_policy: ex.ExecutionPolicy,
+                    n_draft: int, *, paged: bool = False):
+    """Build the draft chain: ``n_draft`` greedy ``decode_step``s under
+    ``draft_policy``, all from the *same* starting cache refs — the
+    intermediate draft caches are dropped (JAX arrays are immutable, so
+    the session's committed cache is untouched), which is what makes
+    re-drafting after a live migration free: there is no draft state to
+    carry, only the committed cache the handoff already moves.
+
+    Returns a function ``(params, tokens (B,1), caches, pos[, page_map])
+    -> tokens_seq (B, n_draft+1)`` whose row is the verify input:
+    ``[t0, d1, ..., d_n]``. Greedy argmax only — the draft proposes, it
+    never samples."""
+    from repro.models import transformer as tf
+    cfg, rt = ex.apply_policy(cfg, rt, draft_policy)
+
+    def draft(params, tokens, caches, pos, page_map=None):
+        b = tokens.shape[0]
+        posb = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (b,))
+        tok = tokens.astype(jnp.int32)
+        seq = [tok]
+        cur = caches
+        for j in range(n_draft):
+            if paged:
+                logits, cur = tf.paged_decode_step(params, tok, cur,
+                                                   posb + j, page_map,
+                                                   cfg, rt)
+            else:
+                logits, cur = tf.decode_step(params, tok, cur, posb + j,
+                                             cfg, rt)
+            tok = jnp.argmax(logits, axis=-1)[:, None].astype(jnp.int32)
+            seq.append(tok)
+        return jnp.concatenate(seq, axis=1)
+
+    if paged:
+        return lambda params, tokens, caches, pos, page_map: \
+            draft(params, tokens, caches, pos, page_map)
+    return lambda params, tokens, caches, pos: \
+        draft(params, tokens, caches, pos)
+
+
+def make_verify_step(cfg, rt, *, paged: bool = False):
+    """Build the bf16 (session-policy) verify step around
+    :func:`~repro.models.transformer.multi_decode_step`. ``cfg``/``rt``
+    must already carry the session policy (``ServeSession`` applies it at
+    construction) so verification is bit-identical to the session's plain
+    decode step."""
+    from repro.models import transformer as tf
+    if paged:
+        def step(params, tokens_seq, caches, pos, active, page_map):
+            return tf.paged_multi_decode_step(params, tokens_seq, caches,
+                                              pos, active, page_map, cfg, rt)
+    else:
+        def step(params, tokens_seq, caches, pos, active):
+            return tf.multi_decode_step(params, tokens_seq, caches, pos,
+                                        active, cfg, rt)
+    return step
+
+
+# ---------------------------------------------------------------------------
+# Online depth control (the AdaptiveQuota of speculation)
+# ---------------------------------------------------------------------------
+
+class AdaptiveK:
+    """Re-derive the speculation depth online from acceptance telemetry.
+
+    Mirrors :class:`~repro.runtime.scheduler.AdaptiveQuota`'s shape: the
+    session feeds one observation per tenant per speculative step
+    (:meth:`observe`), and every ``interval`` ticks (:meth:`on_step`)
+    each tenant's EMA moves its *desired* depth by at most 1 — growth
+    toward ``spec.k`` above ``grow_above``, shrink toward the floor of 1
+    below ``shrink_below``. The actuated session depth is the **minimum**
+    desired depth across tenants sharing the batch (the verify step is
+    batch-wide; one low-acceptance tenant paying for deep drafts it
+    rejects costs more than shallow drafts cost the others).
+
+    The floor disables drafting entirely (``k = 1`` runs the plain decode
+    path). With drafting off no new acceptance evidence arrives, so the
+    floor is sticky until a tenant's recorded EMA decays out — by design:
+    re-probing costs exact work, and a deployment that wants the probe
+    back simply re-admits speculation via the spec.
+    """
+
+    def __init__(self, spec: SpecDecodeSpec):
+        self.spec = spec
+        self.max_k = spec.k
+        self.ema: Dict[str, float] = {}
+        self.desired: Dict[str, int] = {}
+        self.k = spec.k
+        self.steps = 0
+        self.recalcs = 0
+
+    def observe(self, tenant: str, drafted: int, accepted: int) -> None:
+        """One tenant-step acceptance sample (``accepted`` of ``drafted``
+        proposed tokens survived the verify)."""
+        if drafted <= 0:
+            return
+        r = accepted / drafted
+        prev = self.ema.get(tenant)
+        a = self.spec.ema_alpha
+        self.ema[tenant] = r if prev is None else (1 - a) * prev + a * r
+        self.desired.setdefault(tenant, self.k)
+
+    def on_step(self) -> int:
+        """Tick once per decode step; returns the depth to use next."""
+        self.steps += 1
+        if self.steps % self.spec.interval == 0 and self.ema:
+            self.recalcs += 1
+            for tenant, r in self.ema.items():
+                d = self.desired.get(tenant, self.k)
+                if r >= self.spec.grow_above:
+                    d = min(self.max_k, d + 1)
+                elif r <= self.spec.shrink_below:
+                    d = max(1, d - 1)
+                self.desired[tenant] = d
+            self.k = min(self.desired.values())
+        return self.k
+
+    def forget(self, tenant: str) -> None:
+        """Drop a departed tenant's record (migration / completion) so it
+        stops constraining the batch-wide minimum."""
+        self.ema.pop(tenant, None)
+        self.desired.pop(tenant, None)
+        if self.desired:
+            self.k = min(self.desired.values())

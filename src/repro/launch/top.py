@@ -80,16 +80,22 @@ def render(runtime, report=None, *, clock: Optional[float] = None) -> str:
     lines.append("")
 
     # -- tenants ------------------------------------------------------------
-    lines.append("  TENANT      P   DONE/SUB    TOK   TURN   SLO"
-                 "                    ATTAIN")
+    lines.append("  TENANT      P   DONE/SUB    TOK   TURN   SPEC"
+                 "          SLO                    ATTAIN")
     for t in rep.tenants:
         slo = t.slo or "-"
         att_bar = _bar(t.slo_attainment or 0.0, 10) if t.slo else "-" * 10
         mig = f" *m{t.migrations}" if t.migrations else ""
+        if t.effective_tokens_per_step is not None:
+            acc = f"{t.acceptance_rate * 100:3.0f}%" \
+                if t.acceptance_rate is not None else " n/a"
+            spec = f"{t.effective_tokens_per_step:4.2f}x/{acc}"
+        else:
+            spec = "-"
         lines.append(
             f"  {t.tenant_id:<11} {t.partition:>1}  "
             f"{t.completed:>4}/{t.submitted:<4}  {t.tokens_out:>5}  "
-            f"{t.mean_turnaround_steps:5.1f}   {slo:<21} "
+            f"{t.mean_turnaround_steps:5.1f}   {spec:<12}  {slo:<21} "
             f"{_fmt_att(t.slo_attainment)} [{att_bar}]{mig}")
 
     # -- metrics registry ---------------------------------------------------

@@ -2,10 +2,12 @@ from repro.models.layers import RuntimeCfg, DEFAULT_RT, PackedWeight, dense
 from repro.models.transformer import (
     forward, prefill, decode_step, init_params, params_shape, init_cache,
     cache_shape, paged_decode_step, init_paged_cache, PAGED_KINDS,
+    multi_decode_step, paged_multi_decode_step,
 )
 
 __all__ = [
     "RuntimeCfg", "DEFAULT_RT", "PackedWeight", "dense", "forward", "prefill",
     "decode_step", "init_params", "params_shape", "init_cache", "cache_shape",
     "paged_decode_step", "init_paged_cache", "PAGED_KINDS",
+    "multi_decode_step", "paged_multi_decode_step",
 ]

@@ -444,7 +444,13 @@ def _paged_decode_attn(x, p, cache, pos, page_map, cfg: ArchConfig,
     lpage = jnp.clip(posb // ps, 0, mp - 1)
     off = posb % ps
     phys = jnp.take_along_axis(page_map, lpage[:, None], axis=1)[:, 0]
-    phys = jnp.where(phys >= 0, phys, trash)
+    # positions at/past the table's capacity (mp * ps == max_len) must not
+    # alias the clipped last page — the dense path's scatter drops such
+    # out-of-bounds rows, so the paged path routes them to trash. Plain
+    # decode never reaches here (the host finishes a slot at max_len), but
+    # a k>1 speculative verify legitimately probes a few positions past
+    # the end of an almost-full slot.
+    phys = jnp.where((phys >= 0) & (posb < mp * ps), phys, trash)
     kp = kp.at[phys, off].set(k[:, 0].astype(kp.dtype))
     vc_pool = vc_pool.at[phys, off].set(v[:, 0].astype(vc_pool.dtype))
     pp = pp.at[phys, off].set(posb)
@@ -560,6 +566,145 @@ def paged_decode_step(params: Params, tokens: jax.Array, caches: Params,
     logits = lm_logits(x[:, 0], params["head"], cfg.vocab_size,
                        policy=ex.policy_from(cfg, rt))
     return logits, new_caches
+
+
+# ---------------------------------------------------------------------------
+# Speculative multi-token verify (draft-and-verify decode; core/speculative)
+# ---------------------------------------------------------------------------
+
+def _rollback_caches(snaps, n_acc, posb, cfg: ArchConfig, page_map=None):
+    """Select the committed cache after a k-step verify pass.
+
+    ``snaps[j]`` is the full cache tree after verify step ``j``, so
+    ``snaps[n_acc[i]]`` is slot ``i``'s last *committed* state. Rather
+    than replay, the rollback treats the two cache-leaf classes
+    differently:
+
+    * **append leaves** — k/v/pos of the ``PAGED_KINDS`` attention
+      caches. Row (or page offset) ``posb + j`` holds only step ``j``'s
+      write, so the final snapshot is kept and rejected rows
+      ``> posb + n_acc`` are scrubbed back to the init sentinel (pos
+      ``-1``, k/v ``0``) — identical to what an unwritten row holds, so
+      over-scrubbing rows that were never written is a value no-op.
+    * **state leaves** — rolling-window KV (``attn_local``), mamba2 /
+      rwkv6 recurrent state, and the hybrid tail. Steps overwrite these
+      in place (a rejected write destroys history that masking cannot
+      recover), so the per-step snapshots are stacked on a new leading
+      axis and each slot gathers the snapshot at its accepted count.
+
+    The stack materializes append leaves too, but those stacked copies
+    are never consumed, so XLA dead-code-eliminates them under jit.
+    """
+    k = len(snaps)
+    final = snaps[-1]
+    b = posb.shape[0]
+    append_blocks = {f"b{i}" for i, kind in enumerate(cfg.superlayer_pattern)
+                     if kind in PAGED_KINDS}
+    stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *snaps)
+
+    def fix(path, f, st):
+        keys = [str(getattr(p, "key", p)) for p in path]
+        if (keys[0] == "layers" and keys[1] in append_blocks
+                and keys[-1] in ("k", "v", "pos")):
+            zero = jnp.asarray(-1 if keys[-1] == "pos" else 0, f.dtype)
+            if page_map is None:
+                # dense layout (n_super, B, max_len, ...): mask-scrub the
+                # rejected rows (row index == position).
+                smax = f.shape[2]
+                scrub = jnp.arange(smax, dtype=jnp.int32)[None, :] \
+                    > (posb + n_acc)[:, None]                    # (B, smax)
+                scrub = scrub.reshape((1, b, smax) + (1,) * (f.ndim - 3))
+                return jnp.where(scrub, zero, f)
+            # pooled layout (n_super, pages+1, page_size, ...): scatter-
+            # scrub each rejected step's (page, offset) row. Accepted
+            # steps and unmapped/out-of-range positions are redirected to
+            # the trash page (duplicate trash writes are fine — the
+            # scrubbed value is a constant).
+            ps = f.shape[2]
+            mp = page_map.shape[1]
+            trash = f.shape[1] - 1
+            for j in range(1, k):
+                pj = posb + j
+                lpage = jnp.clip(pj // ps, 0, mp - 1)
+                off = pj % ps
+                phys = jnp.take_along_axis(page_map, lpage[:, None],
+                                           axis=1)[:, 0]
+                phys = jnp.where((phys >= 0) & (pj < mp * ps), phys, trash)
+                phys = jnp.where(j > n_acc, phys, trash)
+                f = f.at[:, phys, off].set(zero)
+            return f
+        # state leaf: stacked (k, n_axis, B, ...) -> per-slot snapshot
+        moved = jnp.moveaxis(st, 2, 0)                       # (B, k, n, ...)
+        idx = n_acc.reshape((b, 1) + (1,) * (moved.ndim - 2))
+        idx = jnp.broadcast_to(idx, (b, 1) + moved.shape[2:])
+        sel = jnp.take_along_axis(moved, idx, axis=1)[:, 0]  # (B, n, ...)
+        return jnp.moveaxis(sel, 0, 1)
+
+    return jax.tree_util.tree_map_with_path(fix, final, stacked)
+
+
+def _multi_decode(params: Params, tokens_seq: jax.Array, caches: Params,
+                  pos, active, cfg: ArchConfig, rt: RuntimeCfg,
+                  page_map=None):
+    b, k = tokens_seq.shape
+    posb = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (b,))
+    cur = caches
+    snaps = []
+    greedy = []
+    for j in range(k):
+        tok = tokens_seq[:, j:j + 1].astype(jnp.int32)
+        if page_map is None:
+            logits, cur = decode_step(params, tok, cur, posb + j, cfg, rt)
+        else:
+            logits, cur = paged_decode_step(params, tok, cur, posb + j,
+                                            page_map, cfg, rt)
+        greedy.append(jnp.argmax(logits, axis=-1).astype(jnp.int32))
+        snaps.append(cur)
+    g = jnp.stack(greedy, axis=1)                            # (B, k)
+    if k == 1:
+        return g[:, 0:1], g, jnp.zeros((b,), jnp.int32), cur
+    match = (tokens_seq[:, 1:].astype(jnp.int32) == g[:, :-1])
+    n_acc = jnp.cumprod(match.astype(jnp.int32), axis=1).sum(axis=1)
+    # idle (free) slots must behave like plain decode — exactly one write
+    # at their parked position, which admission overwrites — so drafts
+    # are never accepted for them.
+    n_acc = jnp.where(jnp.asarray(active, bool), n_acc, 0)
+    next_tok = jnp.take_along_axis(g, n_acc[:, None], axis=1)
+    new_caches = _rollback_caches(snaps, n_acc, posb, cfg, page_map=page_map)
+    return next_tok, g, n_acc, new_caches
+
+
+def multi_decode_step(params: Params, tokens_seq: jax.Array, caches: Params,
+                      pos, active, cfg: ArchConfig,
+                      rt: RuntimeCfg = DEFAULT_RT):
+    """Score k candidate tokens in ONE jitted pass (speculative verify).
+
+    ``tokens_seq`` (B, k) carries each slot's next input token followed
+    by k-1 draft tokens; ``pos`` (B,) is each slot's decode position and
+    ``active`` (B,) bool marks occupied slots. Step ``j`` runs the exact
+    ``decode_step`` computation at ``pos + j``, so its argmax ``g[:, j]``
+    is *precisely* what plain greedy decode would emit after committing
+    the first ``j`` candidates. The accepted count ``n_acc`` is the
+    longest prefix of drafts matching those argmaxes, which makes the
+    committed tokens ``g[:, :n_acc+1]`` provably identical to plain
+    greedy decode — the exactness contract speculative serving pins.
+
+    Returns ``(next_tokens (B, 1), greedy (B, k), n_acc (B,),
+    new_caches)`` with rejected-token cache writes rolled back
+    (:func:`_rollback_caches`)."""
+    return _multi_decode(params, tokens_seq, caches, pos, active, cfg, rt)
+
+
+def paged_multi_decode_step(params: Params, tokens_seq: jax.Array,
+                            caches: Params, pos, active,
+                            page_map: jax.Array, cfg: ArchConfig,
+                            rt: RuntimeCfg = DEFAULT_RT):
+    """``multi_decode_step`` over a paged cache: rejected pool writes are
+    scrubbed in-jit, so the allocator can release over-grown pages
+    afterwards without touching device memory (``PageAllocator.
+    trim_slot``)."""
+    return _multi_decode(params, tokens_seq, caches, pos, active, cfg, rt,
+                         page_map=page_map)
 
 
 # ---------------------------------------------------------------------------

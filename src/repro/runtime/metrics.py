@@ -49,6 +49,7 @@ LATENCY_BUCKETS_S = (0.0005, 0.001, 0.0025, 0.005, 0.01, 0.025, 0.05,
                      0.1, 0.25, 0.5, 1.0, 2.5)
 # Turnaround buckets (deterministic scheduler steps).
 STEP_BUCKETS = (1.0, 2.0, 4.0, 8.0, 16.0, 32.0, 64.0, 128.0)
+SPEC_COMMIT_BUCKETS = (1.0, 2.0, 3.0, 4.0, 6.0, 8.0)
 
 LabelKey = Tuple[Tuple[str, str], ...]
 
@@ -354,6 +355,16 @@ class MetricsSink:
         self.overlap_speedup = r.gauge(
             PREFIX + "overlap_speedup",
             "latest per-group serial/concurrent wall ratio")
+        self.spec_drafted = r.counter(
+            PREFIX + "spec_drafted_total",
+            "draft tokens proposed per tenant (speculative decode)")
+        self.spec_accepted = r.counter(
+            PREFIX + "spec_accepted_total",
+            "draft tokens the bf16 verify accepted per tenant")
+        self.spec_committed = r.histogram(
+            PREFIX + "spec_committed_tokens",
+            "tokens committed per speculative step per tenant",
+            buckets=SPEC_COMMIT_BUCKETS)
         self._group_walls: Dict[int, List[float]] = {}
         self._glock = threading.Lock()
 
@@ -393,6 +404,15 @@ class MetricsSink:
                 if phase == "handoff":
                     self.handoff_bytes.inc(
                         int(ev.meta.get("handoff_bytes", 0)))
+        elif ev.kind == "spec":
+            tenant = ev.tenant or "?"
+            self.spec_drafted.inc(int(ev.meta.get("drafted", 0)),
+                                  tenant=tenant)
+            self.spec_accepted.inc(int(ev.meta.get("accepted", 0)),
+                                   tenant=tenant)
+            committed = ev.meta.get("committed")
+            if committed:
+                self.spec_committed.observe(float(committed), tenant=tenant)
         elif ev.kind == "paging":
             if ev.meta.get("phase") == "page_oom":
                 self.page_oom.inc(partition=part)
@@ -442,6 +462,11 @@ def observe_runtime(registry: MetricsRegistry, runtime,
                             "mean observed grid-tile fill (x cores)")
     g_backlog = registry.gauge(PREFIX + "backlog_requests",
                                "queued + in-flight requests")
+    g_acc = registry.gauge(PREFIX + "spec_acceptance_rate",
+                           "per-tenant draft acceptance ratio [0,1]")
+    g_eff = registry.gauge(PREFIX + "spec_effective_tokens_per_step",
+                           "per-tenant committed tokens per speculative "
+                           "step")
     g_fair.set(rep.fairness)
     g_tok.set(rep.tokens_out)
     g_steps.set(rep.steps)
@@ -449,6 +474,10 @@ def observe_runtime(registry: MetricsRegistry, runtime,
         if row.slo_attainment is not None:
             g_att.set(row.slo_attainment, tenant=row.tenant_id,
                       slo=row.slo or "none")
+        if row.acceptance_rate is not None:
+            g_acc.set(row.acceptance_rate, tenant=row.tenant_id)
+        if row.effective_tokens_per_step is not None:
+            g_eff.set(row.effective_tokens_per_step, tenant=row.tenant_id)
     n_cores = cc.detect_core_count()
     for i, tr in enumerate(runtime.tracers):
         fill = tr.mean_fill(n_cores)

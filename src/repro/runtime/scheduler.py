@@ -202,6 +202,9 @@ class Tenant:
     frozen: bool = False             # draining: no new admissions
     first_submit_step: int = -1      # earliest demand (starvation lower
     #                                  bound when nothing ever completes)
+    spec_steps: int = 0              # speculative decode steps holding a slot
+    spec_drafted: int = 0            # draft tokens proposed across those steps
+    spec_accepted: int = 0           # drafts the bf16 verify accepted
 
     def slot_cap(self, default: int) -> int:
         """Concurrent-slot quota: the tenant policy's stream budget if it
@@ -226,6 +229,14 @@ class TenantReport:
     migrations: int = 0              # times this tenant was live-migrated
     slo: str = ""                    # SLO spec string ("": no SLO)
     slo_attainment: Optional[float] = None   # None: no SLO or no demand
+    spec_steps: int = 0              # speculative decode steps
+    spec_drafted: int = 0            # draft tokens proposed
+    spec_accepted: int = 0           # drafts accepted by the verify
+    acceptance_rate: Optional[float] = None  # accepted/drafted (None: no
+    #                                          drafts proposed)
+    effective_tokens_per_step: Optional[float] = None  # committed tokens
+    #                                  per speculative step (>= 1.0; None
+    #                                  without speculative steps)
 
     def to_dict(self) -> Dict[str, Any]:
         return dataclasses.asdict(self)
@@ -259,6 +270,9 @@ def build_tenant_report(tid: str, records: Sequence[Tenant],
             tokens_out=sum(t.tokens_out for t in records),
             steps=step_count, completed=len(completed),
             submitted=submitted)
+    spec_steps = sum(t.spec_steps for t in records)
+    spec_drafted = sum(t.spec_drafted for t in records)
+    spec_accepted = sum(t.spec_accepted for t in records)
     row = TenantReport(
         tenant_id=tid,
         completed=len(completed),
@@ -272,7 +286,14 @@ def build_tenant_report(tid: str, records: Sequence[Tenant],
         partition=partition,
         migrations=migrations,
         slo=slo.spec() if slo is not None else "",
-        slo_attainment=slo_att)
+        slo_attainment=slo_att,
+        spec_steps=spec_steps,
+        spec_drafted=spec_drafted,
+        spec_accepted=spec_accepted,
+        acceptance_rate=(spec_accepted / spec_drafted
+                         if spec_drafted else None),
+        effective_tokens_per_step=((spec_accepted + spec_steps) / spec_steps
+                                   if spec_steps else None))
     if ta:
         contribution: Optional[float] = mean_ta
     elif submitted:
@@ -768,10 +789,25 @@ class StreamScheduler:
         for t in self.tenants.values():
             if t.active:
                 t.service_steps += 1
+        drain = getattr(self.session, "drain_spec_deltas", None)
+        if drain is not None:
+            for tenant, drafted, accepted in drain():
+                t = self.tenants.get(tenant)
+                if t is None:
+                    continue
+                t.spec_steps += 1
+                t.spec_drafted += drafted
+                t.spec_accepted += accepted
         for req in done:
             t = self.tenants[req.tenant]
             t.active -= 1
             self._finish(t, req)
+            if (t.active == 0 and not t.queue
+                    and getattr(self.session, "adaptive_k", None)
+                    is not None):
+                # a drained tenant must stop constraining the batch-wide
+                # adaptive speculation depth
+                self.session.adaptive_k.forget(t.tenant_id)
         self._wall_s = time.perf_counter() - self._t0
         return done
 

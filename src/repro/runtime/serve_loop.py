@@ -28,6 +28,7 @@ from repro.configs.base import ArchConfig
 from repro.core import concurrency as cc
 from repro.core import execution as ex
 from repro.core import paging
+from repro.core import speculative as spv
 from repro.models import (
     PAGED_KINDS, decode_step, init_cache, init_paged_cache, prefill)
 from repro.models.transformer import paged_decode_step
@@ -340,6 +341,11 @@ class DecodeTicket:
     lane: str = ""
     overlap_group: int = -1
     t0: float = 0.0
+    # Speculative decode: the depth this step ran at (1 = plain decode)
+    # and the draft chain's own lane handle (telemetry; the verify thunk
+    # already consumes its result as an XLA data dependency).
+    spec_k: int = 1
+    draft_handle: Optional[cc.LaneHandle] = None
 
 
 class ServeSession:
@@ -363,7 +369,21 @@ class ServeSession:
                  policy=None, auto_backend: Optional[str] = None,
                  verbose_policy: bool = False, telemetry=None,
                  paged: bool = False, page_size: int = 16,
-                 pages: Optional[int] = None):
+                 pages: Optional[int] = None, speculative=None):
+        # Speculative decoding rides on the greedy-exactness contract:
+        # the verify pass accepts drafts by argmax comparison, so a
+        # sampling session has no exact acceptance rule. Refuse up front
+        # (the kill switch is SpecDecodeSpec(k=1) or speculative=None).
+        self.speculative = spv.SpecDecodeSpec.from_any(speculative)
+        if self.speculative is not None and temperature > 0:
+            raise ValueError(
+                "speculative decoding is greedy-only (temperature == 0): "
+                "verify-by-argmax has no exact acceptance rule for "
+                f"sampled decode (temperature={temperature})")
+        # The draft chain may need the unpacked weights (a dense-layout
+        # draft policy under a sparse24 session policy): keep the raw
+        # reference from before any pack.
+        raw_params = params
         if policy == "auto":
             # paper-§9.2 resolution at session construction: the dominant
             # decode GEMM is (slots, d_model, d_ff); decode is
@@ -438,6 +458,26 @@ class ServeSession:
         self.queue: List[Request] = []
         self.completed: List[Request] = []
         self._inflight: Optional[DecodeTicket] = None
+        # -- speculative decode state ----------------------------------
+        self._spec_fns: Dict[int, Tuple[Callable, Callable]] = {}
+        self._spec_deltas: List[Tuple[str, int, int]] = []
+        self.spec_totals: Dict[str, Dict[str, int]] = {}
+        self.adaptive_k: Optional[spv.AdaptiveK] = None
+        self._draft_params = None
+        if self.speculative is not None:
+            dpol = self.speculative.resolved()
+            if dpol.sparsity == "sparse24":
+                # share the session's already-packed weights when both
+                # policies are sparse24; otherwise pack a draft copy once
+                if isinstance(self.policy, ex.ExecutionPolicy) \
+                        and self.policy.sparsity == "sparse24":
+                    self._draft_params = self.params
+                else:
+                    self._draft_params = ex.pack_model_params(raw_params)
+            else:
+                self._draft_params = raw_params
+            if self.speculative.adaptive:
+                self.adaptive_k = spv.AdaptiveK(self.speculative)
 
     # -- slot-level API (used by the scheduler) ----------------------------
     def _policy_scope(self):
@@ -669,6 +709,56 @@ class ServeSession:
         self.tokens = self.tokens.at[slot, 0].set(export.token)
         return slot
 
+    # -- speculative decode plumbing ----------------------------------------
+    def _next_spec_k(self) -> int:
+        """Depth for the next decode step: the spec's k, or the adaptive
+        controller's current actuation (floor 1 = drafting disabled)."""
+        if self.speculative is None:
+            return 1
+        if self.adaptive_k is not None:
+            return max(1, min(self.adaptive_k.k, self.speculative.k))
+        return self.speculative.k
+
+    def _spec_fns_for(self, k: int) -> Tuple[Callable, Callable]:
+        """Jitted (draft, verify) pair for depth ``k``.
+
+        The speculative geometry — the draft policy's full spec AND k —
+        is part of the draft jit key: k and the policy are baked into the
+        trace, so two sessions differing only in speculative geometry
+        must not share a compiled draft chain. Audit of the remaining
+        ``ServingSpec``-derived key components: cfg/rt (session policy
+        applied), the ambient default policy, temperature (speculation is
+        greedy-only, so the verify excludes it by construction), and page
+        geometry are already in the plain-step keys; ``batch_slots`` /
+        ``max_len`` / k-as-operand-width only change traced *shapes*,
+        which one ``jax.jit`` re-traces per shape on its own."""
+        fns = self._spec_fns.get(k)
+        if fns is None:
+            spec = self.speculative
+            dkey = spec.spec_key()
+            ambient = ex.get_default_policy()
+            geo = (self.page_size, self.pages) if self.paged else ()
+            draft_fn = _cached_jit(
+                "spec_draft",
+                lambda: spv.make_draft_step(self.cfg, self.rt,
+                                            spec.resolved(), k - 1,
+                                            paged=self.paged),
+                self.cfg, self.rt, ambient, dkey, k, self.paged, *geo)
+            verify_fn = _cached_jit(
+                "spec_verify",
+                lambda: spv.make_verify_step(self.cfg, self.rt,
+                                             paged=self.paged),
+                self.cfg, self.rt, ambient, self.paged, *geo)
+            fns = self._spec_fns[k] = (draft_fn, verify_fn)
+        return fns
+
+    def drain_spec_deltas(self) -> List[Tuple[str, int, int]]:
+        """Hand the per-slot ``(tenant, drafted, accepted)`` samples since
+        the last drain to the caller (the scheduler folds them into its
+        per-tenant accounting)."""
+        out, self._spec_deltas = self._spec_deltas, []
+        return out
+
     def dispatch_decode(self, lane: Optional[cc.ExecutionLane] = None, *,
                         overlap_group: int = -1) -> DecodeTicket:
         """Dispatch half of a decode step: page bookkeeping, then enqueue
@@ -685,15 +775,36 @@ class ServeSession:
                 "ticket before dispatching another step")
         if self.n_active == 0:
             return DecodeTicket(handle=None, oom_done=[])
+        k = self._next_spec_k()
         oom_done: List[Request] = []
         if self.paged:
+            if k > 1:
+                # batch-wide feasibility first: a k-deep verify needs a
+                # page for every candidate position. If the pool cannot
+                # cover the whole batch, downgrade THIS step to plain
+                # decode (k=1) instead of truncating requests that plain
+                # decode could still serve.
+                need = 0
+                for i, req in enumerate(self.slots):
+                    if req is None:
+                        continue
+                    tgt = min(int(self.slot_pos[i]) + k, self.max_len)
+                    need += max(0, self.pager.pages_for(tgt)
+                                - len(self.pager.slot_pages(i)))
+                if need > self.pager.free_pages:
+                    self.pager.record(self.tracer, phase="spec_downgrade",
+                                      need_pages=need)
+                    k = 1
             # lazy page append: make sure every active slot has a page
-            # for the position this step writes. Pool exhaustion finishes
-            # the request truncated (refused, never crashed).
+            # for each position this step may write (k candidates on a
+            # speculative step; positions past max_len route to the
+            # trash page in-kernel). Pool exhaustion finishes the
+            # request truncated (refused, never crashed).
             for i, req in enumerate(self.slots):
                 if req is None:
                     continue
-                need = int(self.slot_pos[i]) + 1
+                need = min(int(self.slot_pos[i]) + k, self.max_len) \
+                    if k > 1 else int(self.slot_pos[i]) + 1
                 if self.pager.pages_for(need) > \
                         len(self.pager.slot_pages(i)):
                     try:
@@ -714,15 +825,55 @@ class ServeSession:
         if lane is None:
             lane = cc.ExecutionLane("session")
         t0 = time.perf_counter()
+        posv = jnp.asarray(self.slot_pos)
+        if k > 1:
+            # draft on its own lane; the verify thunk consumes the draft
+            # handle's *future* tokens (an XLA data dependency — the host
+            # never materializes draft tokens), so a caller that
+            # dispatches the next draft before joining this verify gets
+            # draft(n+1)/verify(n) overlap on real async hardware.
+            active = jnp.asarray(
+                np.array([s is not None for s in self.slots], np.bool_))
+            draft_fn, verify_fn = self._spec_fns_for(k)
+            draft_lane = cc.ExecutionLane("draft", tracer=self.tracer)
+            with self._policy_scope():
+                if self.paged:
+                    dthunk = functools.partial(
+                        draft_fn, self._draft_params, self.tokens,
+                        self.caches, posv, self._page_map)
+                else:
+                    dthunk = functools.partial(
+                        draft_fn, self._draft_params, self.tokens,
+                        self.caches, posv)
+                dh = draft_lane.dispatch(dthunk, label="draft",
+                                         overlap_group=overlap_group)
+                tokens_seq = dh.result
+                if self.paged:
+                    thunk = functools.partial(
+                        verify_fn, self.params, tokens_seq, self.caches,
+                        posv, active, self._page_map)
+                else:
+                    thunk = functools.partial(
+                        verify_fn, self.params, tokens_seq, self.caches,
+                        posv, active)
+                handle = lane.dispatch(thunk, label="decode",
+                                       overlap_group=overlap_group)
+            _, _, _, self.caches = handle.result
+            ticket = DecodeTicket(handle=handle, oom_done=oom_done,
+                                  lane=lane.name,
+                                  overlap_group=overlap_group, t0=t0,
+                                  spec_k=k, draft_handle=dh)
+            self._inflight = ticket
+            return ticket
         with self._policy_scope():
             if self.paged:
                 thunk = functools.partial(
                     self.step_fn, self.params, self.tokens, self.caches,
-                    jnp.asarray(self.slot_pos), self._page_map, sub)
+                    posv, self._page_map, sub)
             else:
                 thunk = functools.partial(
                     self.step_fn, self.params, self.tokens, self.caches,
-                    jnp.asarray(self.slot_pos), sub)
+                    posv, sub)
             handle = lane.dispatch(thunk, label="decode",
                                    overlap_group=overlap_group)
         # the cache references advance to the enqueued (future) arrays
@@ -743,6 +894,8 @@ class ServeSession:
         self._inflight = None
         if ticket.handle is None:
             return list(ticket.oom_done)
+        if ticket.spec_k > 1:
+            return self._join_spec(ticket)
         nxt = ticket.handle.join()[0]
         nxt_np = np.asarray(nxt[:, 0])       # forces the step to complete
         if self.tracer is not None:
@@ -769,6 +922,78 @@ class ServeSession:
                 # utilization accounting: positions written so far plus
                 # the pending next write
                 self.pager.note_tokens(i, int(self.slot_pos[i]) + 1)
+        if self.adaptive_k is not None:
+            self.adaptive_k.on_step()
+        return done
+
+    def _join_spec(self, ticket: DecodeTicket) -> List[Request]:
+        """Join half of a speculative step: commit the accepted prefix
+        (plus the verify's own token) per slot, record acceptance
+        telemetry, and — paged — trim the candidate pages the verify
+        already scrubbed back to the free list."""
+        nxt, greedy, n_acc, _ = ticket.handle.join()
+        g_np = np.asarray(greedy)            # forces the step to complete
+        acc_np = np.asarray(n_acc)
+        k = ticket.spec_k
+        if self.tracer is not None:
+            self.tracer.record(
+                "decode", m=self.batch_slots, k=self.cfg.d_model,
+                n=self.cfg.d_ff, precision=self.cfg.precision,
+                **self._policy_tag(),
+                wall_s=time.perf_counter() - ticket.t0,
+                lane=ticket.lane, overlap_group=ticket.overlap_group,
+                meta={"n_active": self.n_active, "spec_k": k,
+                      "dispatch_to_ready_s":
+                          ticket.handle.dispatch_to_ready_s})
+        self.tokens = nxt
+        done = list(ticket.oom_done)
+        trimmed = False
+        for i, req in enumerate(self.slots):
+            if req is None:
+                continue
+            acc = int(acc_np[i])
+            drafted = k - 1
+            finished = False
+            committed = 0
+            # the accepted drafts and the verify token, in order; finish
+            # mid-commit truncates exactly where plain decode would have
+            # stopped (the surplus accepted tokens were never committed)
+            for t in range(acc + 1):
+                tok = int(g_np[i, t])
+                self.slot_pos[i] += 1
+                req.out.append(tok)
+                committed += 1
+                if self._maybe_finish(i, tok):
+                    done.append(req)
+                    finished = True
+                    break
+            tenant = req.tenant or ""
+            self._spec_deltas.append((tenant, drafted, acc))
+            tot = self.spec_totals.setdefault(
+                tenant, {"steps": 0, "drafted": 0, "accepted": 0,
+                         "committed": 0})
+            tot["steps"] += 1
+            tot["drafted"] += drafted
+            tot["accepted"] += acc
+            tot["committed"] += committed
+            if self.adaptive_k is not None:
+                self.adaptive_k.observe(tenant, drafted, acc)
+            if self.tracer is not None:
+                self.tracer.record(
+                    "spec", tenant=tenant,
+                    meta={"k": k, "drafted": drafted, "accepted": acc,
+                          "committed": committed, "uid": req.uid})
+            if not finished and self.paged:
+                # release the candidate pages the rejected writes grew
+                # into (the verify scrubbed them in-jit before the host
+                # saw n_acc, so they re-enter the free list clean)
+                if self.pager.trim_slot(i, int(self.slot_pos[i]) + 1):
+                    trimmed = True
+                self.pager.note_tokens(i, int(self.slot_pos[i]) + 1)
+        if trimmed:
+            self._sync_page_map()
+        if self.adaptive_k is not None:
+            self.adaptive_k.on_step()
         return done
 
     def decode_once(self, lane: Optional[cc.ExecutionLane] = None

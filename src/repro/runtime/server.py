@@ -48,6 +48,7 @@ from typing import Any, Dict, List, Optional, Sequence, Tuple, Union
 
 from repro.core import concurrency as cc
 from repro.core import execution as ex
+from repro.core.speculative import SpecDecodeSpec
 from repro.runtime import telemetry
 from repro.runtime.scheduler import (
     ADMISSION_POLICIES, QuotaPolicy, SLO, SchedulerReport, StreamScheduler,
@@ -119,6 +120,11 @@ def _policy_str(policy) -> Optional[str]:
     raise TypeError(f"policy {policy!r} is not None/str/ExecutionPolicy")
 
 
+def _spec_dict(speculative) -> Optional[Dict[str, Any]]:
+    spec = SpecDecodeSpec.from_any(speculative)
+    return spec.to_dict() if spec is not None else None
+
+
 @dataclasses.dataclass(frozen=True)
 class PartitionSpec:
     """One partition's declarative config. ``policy`` is an execution-
@@ -138,6 +144,13 @@ class PartitionSpec:
     paged: Optional[bool] = None
     page_size: Optional[int] = None
     pages: Optional[int] = None
+    # Speculative decoding override (core/speculative.SpecDecodeSpec as an
+    # int k / dict / instance; None = inherit the spec-wide setting).
+    # Deliberately EXCLUDED from policy_key(): the committed cache is
+    # bit-identical with or without speculation, so live migration between
+    # partitions with different speculative settings stays legal — there
+    # is no draft state to carry, the target simply re-drafts.
+    speculative: Any = None
 
     def __post_init__(self):
         if self.admission not in ADMISSION_POLICIES:
@@ -152,10 +165,12 @@ class PartitionSpec:
             raise ValueError("page_size must be positive")
         if self.pages is not None and self.pages <= 0:
             raise ValueError("pages must be positive")
+        SpecDecodeSpec.from_any(self.speculative)   # validate now
 
     def to_dict(self) -> Dict[str, Any]:
         d = dataclasses.asdict(self)
         d["policy"] = _policy_str(self.policy)
+        d["speculative"] = _spec_dict(self.speculative)
         return d
 
 
@@ -230,6 +245,11 @@ class ServingSpec:
     paged: bool = False
     page_size: int = 16
     pages: Optional[int] = None
+    # Speculative multi-token decoding (core/speculative.SpecDecodeSpec as
+    # an int k / dict / instance; None = off). Greedy-only — a spec with
+    # temperature > 0 and speculation refuses at construction. Partitions
+    # override via PartitionSpec.speculative.
+    speculative: Any = None
     # Lane overlap: when True (and >1 partition), the runtime co-dispatches
     # partitions the OverlapPlanner pairs from measured decode latencies
     # instead of stepping them through a serial Python loop. Token streams
@@ -260,6 +280,15 @@ class ServingSpec:
             if on and self.max_len % ps:
                 raise ValueError(f"max_len={self.max_len} must be a "
                                  f"multiple of page_size={ps}")
+            sv = self.speculative if p is self or p.speculative is None \
+                else p.speculative
+            if SpecDecodeSpec.from_any(sv) is not None \
+                    and self.temperature > 0:
+                raise ValueError(
+                    "speculative decoding is greedy-only: a spec with "
+                    f"temperature={self.temperature} cannot enable "
+                    "speculation (drop the speculative field or set "
+                    "temperature=0)")
         ids = [t.id for t in self.tenants]
         if len(set(ids)) != len(ids):
             raise ValueError("duplicate tenant ids in spec")
@@ -287,6 +316,7 @@ class ServingSpec:
             "paged": self.paged,
             "page_size": self.page_size,
             "pages": self.pages,
+            "speculative": _spec_dict(self.speculative),
             "overlap": self.overlap,
             "metrics": self.metrics,
         }
@@ -495,12 +525,15 @@ class ServingRuntime:
             p_psize = pspec.page_size if pspec.page_size is not None \
                 else spec.page_size
             p_pages = pspec.pages if pspec.pages is not None else spec.pages
+            p_spec = spec.speculative if pspec.speculative is None \
+                else pspec.speculative
             sess = ServeSession(
                 self._place_params(use_params, part), cfg,
                 batch_slots=pspec.batch_slots or spec.batch_slots,
                 max_len=spec.max_len, temperature=spec.temperature,
                 seed=spec.seed, policy=pol, telemetry=tr,
-                paged=p_paged, page_size=p_psize, pages=p_pages, **kw)
+                paged=p_paged, page_size=p_psize, pages=p_pages,
+                speculative=p_spec, **kw)
             sched = StreamScheduler(
                 sess, admission=pspec.admission, tracer=tr,
                 quota=self._quota_for(quota, pspec, i))
@@ -928,10 +961,17 @@ class ServingRuntime:
         dst_t.tokens_out += src_t.tokens_out
         dst_t.submitted += src_t.submitted
         dst_t.service_steps += src_t.service_steps
+        dst_t.spec_steps += src_t.spec_steps
+        dst_t.spec_drafted += src_t.spec_drafted
+        dst_t.spec_accepted += src_t.spec_accepted
         if src_t.first_submit_step >= 0:
             dst_t.first_submit_step = src_t.first_submit_step \
                 if dst_t.first_submit_step < 0 \
                 else min(dst_t.first_submit_step, src_t.first_submit_step)
+        if src_sess.adaptive_k is not None:
+            # the departed tenant must stop constraining the source's
+            # batch-wide adaptive speculation depth
+            src_sess.adaptive_k.forget(tid)
         src_sched.remove_tenant(tid)
         rec.done_step = self.step_count
         del self._draining[tid]

@@ -1,0 +1,419 @@
+"""Speculative multi-token decoding: the greedy-exactness contract, the
+rejected-write rollback, acceptance telemetry, and the adaptive depth
+controller.
+
+The whole feature leans on one invariant: a speculative session commits
+*exactly* the plain greedy stream — solo, multi-tenant, across a live
+migration handoff, paged and dense — and a rejected draft leaves no
+trace in the cache (the slot-scrub discipline of ``tests/test_paging.py``
+applied per-step instead of per-slot).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_reduced
+from repro.core.speculative import AdaptiveK, SpecDecodeSpec
+from repro.models import init_params
+from repro.models import transformer as tf
+from repro.models.layers import RuntimeCfg
+from repro.runtime.scheduler import run_tenants
+from repro.runtime.serve_loop import Request, ServeSession
+from repro.runtime.telemetry import Tracer
+
+RT = RuntimeCfg(ssm_chunk=16)
+MAX_LEN = 64
+PAGE = 8
+
+
+@pytest.fixture(scope="module")
+def model():
+    cfg = get_reduced("llama3-8b")
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    return cfg, params
+
+
+def _session(model, *, slots=2, paged=False, speculative=None, **kw):
+    cfg, params = model
+    if paged:
+        kw.setdefault("page_size", PAGE)
+    return ServeSession(params, cfg, batch_slots=slots, max_len=MAX_LEN,
+                        rt=RT, paged=paged, speculative=speculative, **kw)
+
+
+def _prompts(cfg, n, length=6, seed=0, repetitive=False):
+    rng = np.random.default_rng(seed)
+    if repetitive:   # accept-friendly: the attractor the draft predicts
+        return [np.array([5 + 2 * i, 9 + 2 * i] * (length // 2),
+                         np.int32) for i in range(n)]
+    return [rng.integers(0, cfg.vocab_size, length).astype(np.int32)
+            for _ in range(n)]
+
+
+def _run_all(sess, prompts, max_new=8, tenants=None):
+    reqs = [Request(uid=i, prompt=p.copy(), max_new=max_new,
+                    tenant=tenants[i] if tenants else "")
+            for i, p in enumerate(prompts)]
+    for r in reqs:
+        sess.submit(r)
+    sess.run()
+    return [list(r.out) for r in reqs]
+
+
+def _pool_leaves(sess):
+    for blk, leaves in sess.caches["layers"].items():
+        pos = leaves.get("pos")
+        if pos is not None and pos.ndim == 3 \
+                and pos.shape[1] == sess.pages + 1 \
+                and pos.shape[2] == sess.page_size:
+            yield blk, leaves
+
+
+# ---------------------------------------------------------------------------
+# The exactness contract
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("spec", [2, 4,
+                                  {"k": 4, "draft_policy": "fp8:sparse24"}])
+def test_spec_equals_plain_solo_dense(model, spec):
+    cfg, _ = model
+    prompts = _prompts(cfg, 1, repetitive=True)
+    ref = _run_all(_session(model, slots=1), [p.copy() for p in prompts])
+    out = _run_all(_session(model, slots=1, speculative=spec), prompts)
+    assert out == ref
+
+
+def test_spec_equals_plain_multi_tenant_paged(model):
+    cfg, _ = model
+    # mixed stream: accept-friendly + hostile prompts sharing the batch,
+    # so acceptance differs per slot within a single verify step
+    prompts = _prompts(cfg, 2, repetitive=True) + _prompts(cfg, 2, seed=3)
+    tenants = ["a", "b", "a", "b"]
+    ref = _run_all(_session(model, slots=2, paged=True),
+                   [p.copy() for p in prompts], tenants=tenants)
+    out = _run_all(_session(model, slots=2, paged=True, speculative=4),
+                   prompts, tenants=tenants)
+    assert out == ref
+
+
+def test_k1_kill_switch_is_plain_path(model):
+    """``k = 1`` disables drafting: the plain jitted step runs (same rng
+    stream, bit-identical) and no speculative telemetry is recorded."""
+    cfg, _ = model
+    prompts = _prompts(cfg, 2, seed=1)
+    sess = _session(model, speculative=1)
+    for i, p in enumerate(prompts):
+        sess.submit(Request(uid=i, prompt=p.copy(), max_new=6))
+    sess._admit_from_queue()
+    ticket = sess.dispatch_decode()
+    assert ticket.spec_k == 1 and ticket.draft_handle is None
+    sess.join_decode(ticket)
+    sess.run()
+    assert sess.spec_totals == {}
+    ref = _run_all(_session(model), [p.copy() for p in prompts], max_new=6)
+    assert [list(r.out) for r in sess.completed] == ref
+
+
+def test_spec_survives_temperature_refusal(model):
+    with pytest.raises(ValueError):
+        _session(model, speculative=2, temperature=0.7)
+
+
+def test_spec_across_migration_handoff(model):
+    """Mid-request handoff out of a k=4 speculative session into a k=2
+    one: the committed cache is all that moves (drafts are never state),
+    and the stream stays token-identical to the uninterrupted plain run."""
+    cfg, _ = model
+    (p,) = _prompts(cfg, 1, repetitive=True)
+    src = _session(model, slots=2, paged=True, speculative=4)
+    dst = _session(model, slots=2, paged=True, speculative=2)
+    req = Request(uid=7, prompt=p.copy(), max_new=12)
+    src.admit(req)
+    for _ in range(2):
+        src.decode_once()
+    assert not req.done
+    export = src.export_slot(0)
+    dst.import_slot(export)
+    while not req.done:
+        dst.decode_once()
+    ref = Request(uid=8, prompt=p.copy(), max_new=12)
+    plain = _session(model, slots=2, paged=True)
+    plain.admit(ref)
+    while not ref.done:
+        plain.decode_once()
+    assert req.out == ref.out
+
+
+# ---------------------------------------------------------------------------
+# Rejected-write rollback
+# ---------------------------------------------------------------------------
+
+def _prefilled(model, paged):
+    """One-slot cache with a short prompt prefilled via a plain session
+    (pos > 0 so rollback has history to preserve), plus the step inputs."""
+    cfg, _ = model
+    sess = _session(model, slots=1, paged=paged)
+    (p,) = _prompts(cfg, 1, seed=2)
+    sess.admit(Request(uid=0, prompt=p.copy(), max_new=32))
+    for _ in range(2):
+        sess.decode_once()
+    pos = jnp.asarray(sess.slot_pos)
+    tok = sess.tokens.astype(jnp.int32)
+    pm = sess._page_map if paged else None
+    return sess, tok, pos, pm
+
+
+@pytest.mark.parametrize("paged", [False, True])
+def test_all_rejected_step_equals_plain_step(model, paged):
+    """Drafts chosen to all mismatch: the multi-token step must leave the
+    cache EXACTLY as one plain decode step would — KV appends past the
+    accepted position scrubbed (zeros, pos -1), recurrent/window state
+    rolled back to the first step's snapshot."""
+    cfg, _ = model
+    sess, tok, pos, pm = _prefilled(model, paged)
+    active = jnp.ones((1,), bool)
+    k = 4
+    if paged:
+        # grow the slot to cover the k candidate positions, as dispatch
+        # would, so both runs see the same page table
+        sess.pager.extend_slot(0, min(int(pos[0]) + k, MAX_LEN))
+        sess._sync_page_map()
+        pm = sess._page_map
+        logits, plain = tf.paged_decode_step(sess.params, tok, sess.caches,
+                                             pos, pm, sess.cfg, sess.rt)
+    else:
+        logits, plain = tf.decode_step(sess.params, tok, sess.caches, pos,
+                                       sess.cfg, sess.rt)
+    g0 = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    bad = (g0 + 1) % cfg.vocab_size          # guaranteed mismatch drafts
+    seq = jnp.concatenate([tok] + [bad[:, None]] * (k - 1), axis=1)
+    if paged:
+        nxt, greedy, n_acc, rolled = tf.paged_multi_decode_step(
+            sess.params, seq, sess.caches, pos, active, pm,
+            sess.cfg, sess.rt)
+    else:
+        nxt, greedy, n_acc, rolled = tf.multi_decode_step(
+            sess.params, seq, sess.caches, pos, active, sess.cfg, sess.rt)
+    assert int(n_acc[0]) == 0
+    assert int(nxt[0, 0]) == int(g0[0]) == int(greedy[0, 0])
+    mismatched = []
+
+    def cmp(path, a, b):
+        a, b = np.asarray(a), np.asarray(b)
+        if paged and a.ndim >= 2 and a.shape[1] == sess.pages + 1:
+            a, b = a[:, :-1], b[:, :-1]      # trash page is scratch
+        if not (a == b).all():
+            mismatched.append(jax.tree_util.keystr(path))
+
+    jax.tree_util.tree_map_with_path(cmp, rolled, plain)
+    assert not mismatched, f"stale rejected writes in {mismatched}"
+
+
+def test_idle_slot_untouched_by_verify(model):
+    """A free slot (active=False) must behave like plain decode's single
+    write, never commit beyond position 0's worth of writes."""
+    cfg, _ = model
+    sess, tok, pos, _ = _prefilled(model, paged=False)
+    active = jnp.zeros((1,), bool)
+    seq = jnp.concatenate([tok, tok, tok, tok], axis=1)
+    _, _, n_acc, _ = tf.multi_decode_step(sess.params, seq, sess.caches,
+                                          pos, active, sess.cfg, sess.rt)
+    assert int(n_acc[0]) == 0
+
+
+def test_spec_pages_trim_and_no_stale_leak(model):
+    """Speculative paged decode over-grows k candidate pages per step and
+    trims after the verify; after a full drain the pool must be fully
+    scrubbed and the LIFO-reused pages must serve the next tenant with
+    bit-exact outputs (the test_paging reuse attack, speculative
+    edition)."""
+    cfg, _ = model
+    pa, pb = _prompts(cfg, 2, seed=5)
+    sess = _session(model, slots=1, paged=True, speculative=4)
+    _run_all(sess, [pa], max_new=10)
+    assert sess.pager.pages_in_use == 0
+    found = False
+    for _, leaves in _pool_leaves(sess):
+        found = True
+        assert (np.asarray(leaves["pos"])[:, :-1] == -1).all()
+        assert (np.asarray(leaves["k"], np.float32)[:, :-1] == 0).all()
+        assert (np.asarray(leaves["v"], np.float32)[:, :-1] == 0).all()
+    assert found
+    (out_b,) = _run_all(sess, [pb], max_new=10)
+    (ref_b,) = _run_all(_session(model, slots=1, paged=True),
+                        [pb.copy()], max_new=10)
+    assert out_b == ref_b
+
+
+# ---------------------------------------------------------------------------
+# Telemetry arithmetic
+# ---------------------------------------------------------------------------
+
+def test_acceptance_telemetry_arithmetic(model):
+    cfg, _ = model
+    sess = _session(model, slots=2, speculative=4, telemetry=Tracer())
+    rep = run_tenants(
+        sess,
+        {"a": [Request(uid=0, prompt=p.copy(), max_new=10, tenant="a")
+               for p in _prompts(cfg, 2, repetitive=True)],
+         "b": [Request(uid=10, prompt=p.copy(), max_new=10, tenant="b")
+               for p in _prompts(cfg, 2, seed=9)]})
+    rows = {t.tenant_id: t for t in rep.tenants}
+    for tid, tot in sess.spec_totals.items():
+        row = rows[tid]
+        assert row.spec_steps == tot["steps"] > 0
+        assert row.spec_drafted == tot["drafted"] == 3 * tot["steps"]
+        assert row.spec_accepted == tot["accepted"] <= tot["drafted"]
+        assert row.acceptance_rate == pytest.approx(
+            tot["accepted"] / tot["drafted"])
+        assert row.effective_tokens_per_step == pytest.approx(
+            (tot["accepted"] + tot["steps"]) / tot["steps"])
+        assert 1.0 <= row.effective_tokens_per_step <= 4.0
+    # the tracer's spec events carry the same totals the session keeps
+    ev = [e for e in sess.tracer.events("spec")]
+    assert ev, "speculative steps recorded no spec events"
+    by_tenant = {}
+    for e in ev:
+        d = by_tenant.setdefault(e.tenant, {"drafted": 0, "accepted": 0})
+        d["drafted"] += e.meta["drafted"]
+        d["accepted"] += e.meta["accepted"]
+    for tid, d in by_tenant.items():
+        assert d["drafted"] == sess.spec_totals[tid]["drafted"]
+        assert d["accepted"] == sess.spec_totals[tid]["accepted"]
+
+
+def test_metrics_sink_folds_spec_events(model):
+    from repro.runtime.metrics import MetricsRegistry, MetricsSink
+    cfg, _ = model
+    reg = MetricsRegistry()
+    sess = _session(model, slots=1, speculative=2, telemetry=Tracer())
+    MetricsSink(reg).attach(sess.tracer)
+    (p,) = _prompts(cfg, 1, repetitive=True)
+    _run_all(sess, [p], max_new=8, tenants=["t0"])
+    tot = sess.spec_totals["t0"]
+    drafted = reg.get("repro_spec_drafted_total").value(tenant="t0")
+    accepted = reg.get("repro_spec_accepted_total").value(tenant="t0")
+    assert drafted == tot["drafted"] and accepted == tot["accepted"]
+    hist = reg.get("repro_spec_committed_tokens").value(tenant="t0")
+    assert hist["count"] == tot["steps"]
+    assert hist["sum"] == pytest.approx(tot["committed"])
+
+
+# ---------------------------------------------------------------------------
+# Adaptive depth
+# ---------------------------------------------------------------------------
+
+def test_adaptive_k_grows_and_shrinks():
+    spec = SpecDecodeSpec(k=4, adaptive=True, interval=2, ema_alpha=1.0)
+    ak = AdaptiveK(spec)
+    assert ak.k == 4
+    # sustained rejection walks every tenant down to the floor
+    for _ in range(8):
+        ak.observe("t", 3, 0)
+        ak.on_step()
+    assert ak.k == 1
+    # sustained acceptance walks it back up to spec.k
+    for _ in range(10):
+        ak.observe("t", 3, 3)
+        ak.on_step()
+    assert ak.k == 4
+    # the actuated depth is the MIN across tenants sharing the batch
+    ak.observe("slow", 3, 0)
+    for _ in range(8):
+        ak.observe("t", 3, 3)
+        ak.observe("slow", 3, 0)
+        ak.on_step()
+    assert ak.desired["t"] == 4 and ak.desired["slow"] == 1
+    assert ak.k == 1
+    ak.forget("slow")
+    assert ak.k == 4
+
+
+def test_adaptive_session_actuates_depth(model):
+    cfg, _ = model
+    sess = _session(model, slots=1,
+                    speculative={"k": 4, "adaptive": True})
+    assert sess.adaptive_k is not None
+    assert sess._next_spec_k() == 4
+    sess.adaptive_k.k = 1                 # controller hit the floor
+    assert sess._next_spec_k() == 1
+    (p,) = _prompts(cfg, 1, repetitive=True)
+    sess.submit(Request(uid=0, prompt=p.copy(), max_new=4))
+    sess._admit_from_queue()
+    ticket = sess.dispatch_decode()
+    assert ticket.spec_k == 1             # plain path while floored
+    sess.join_decode(ticket)
+    sess.run()
+    assert sess.adaptive_k.steps > 0      # on_step ticked on plain joins
+
+
+def test_adaptive_off_by_default(model):
+    assert _session(model, speculative=4).adaptive_k is None
+
+
+# ---------------------------------------------------------------------------
+# Jit cache keys (the satellite regression: speculative geometry must key
+# the cache — and nothing else about ServingSpec changes traced shapes
+# without already being in a key)
+# ---------------------------------------------------------------------------
+
+def test_jit_keys_split_by_spec_geometry(model):
+    s4 = _session(model, speculative={"k": 4, "draft_policy": "fp8"})
+    d4, v4 = s4._spec_fns_for(4)
+    d2, v2 = s4._spec_fns_for(2)
+    assert d4 is not d2                  # k keys the draft chain
+    assert v4 is v2                      # verify retraces by shape, not key
+    sp = _session(model,
+                  speculative={"k": 4, "draft_policy": "fp8:sparse24"})
+    dsp, vsp = sp._spec_fns_for(4)
+    assert dsp is not d4                 # draft policy keys the draft
+    assert vsp is v4                     # same session policy -> shared
+    # identical speculative geometry on a fresh session shares the cache
+    s4b = _session(model, speculative={"k": 4, "draft_policy": "fp8"})
+    d4b, _ = s4b._spec_fns_for(4)
+    assert d4b is d4
+
+
+def test_paged_spec_keys_include_page_geometry(model):
+    a = _session(model, paged=True, page_size=8, speculative=4)
+    b = _session(model, paged=True, page_size=16, speculative=4)
+    da, _ = a._spec_fns_for(4)
+    db, _ = b._spec_fns_for(4)
+    assert da is not db
+
+
+# ---------------------------------------------------------------------------
+# Spec surface
+# ---------------------------------------------------------------------------
+
+def test_spec_decode_spec_validation():
+    assert SpecDecodeSpec.from_any(None) is None
+    assert SpecDecodeSpec.from_any(3).k == 3
+    s = SpecDecodeSpec.from_any({"k": 2, "draft_policy": "fp8:sparse24"})
+    assert s.spec_key().startswith("fp8:sparse24")
+    assert SpecDecodeSpec.from_any(s) is s
+    with pytest.raises(TypeError):
+        SpecDecodeSpec.from_any(True)
+    with pytest.raises(ValueError):
+        SpecDecodeSpec.from_any({"k": 2, "nope": 1})
+    with pytest.raises(ValueError):
+        SpecDecodeSpec(k=0)
+    with pytest.raises(ValueError):
+        SpecDecodeSpec(grow_above=0.2, shrink_below=0.5)
+    rt = SpecDecodeSpec.from_any(s.to_dict())
+    assert rt == s or rt.spec_key() == s.spec_key()
+
+
+def test_serving_spec_speculative_roundtrip_and_refusal(model):
+    from repro.runtime.server import PartitionSpec, ServingSpec
+    spec = ServingSpec(partitions=(PartitionSpec(),
+                                   PartitionSpec(speculative=4)),
+                       speculative={"k": 2, "draft_policy": "fp8"})
+    again = ServingSpec.from_dict(spec.to_dict())
+    assert again.to_dict() == spec.to_dict()
+    with pytest.raises(ValueError):
+        ServingSpec(temperature=0.5, speculative=2)
+    with pytest.raises(ValueError):
+        ServingSpec(temperature=0.5,
+                    partitions=(PartitionSpec(speculative=2),))
