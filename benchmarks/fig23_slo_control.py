@@ -1,0 +1,175 @@
+"""Fig 23 (beyond-paper) — SLO closed loop under generated traffic:
+attainment recovery at bounded batch cost.
+
+The paper's concurrency guidance is about *decisions* — when co-running
+workloads helps and when a latency-sensitive stream needs the machine.
+PRs 2-8 built every mechanism (admission classes, quotas, freeze/thaw,
+SLO attainment measurement) but nothing *acted* on the signal. This
+figure closes the loop and prices it.
+
+The workload is generated, not scripted (``runtime/workload.py``): a
+Zipf-popular pair of batch-class tenants (long outputs, bursty ON/OFF
+arrivals) beside one unpopular latency-class tenant (short interactive
+answers, ``latency:20`` turnaround SLO) through a 2-slot FIFO partition
+— the fairness-collapse configuration from fig17. Two arms, same seeded
+trace:
+
+* **off** — measurement only (the pre-PR runtime): the batch convoy
+  starves the latency tenant; attainment lands near zero.
+* **on** — ``SLOController``: the starvation/at-risk signal freezes
+  batch-class tenants and boosts the latency tenant's slot cap within
+  one control interval; hysteresis (low/high band + hold streak)
+  releases after the pressure passes.
+
+Asserted headline: latency attainment < 0.7 off, >= 0.95 on, with
+
+* committed tokens per uid IDENTICAL across arms (the controller only
+  reorders admission; greedy decode is execution-order exact — the PR 2
+  invariant extended to preemption), and
+* bounded batch cost: the batch tenants' step-domain throughput ratio
+  off/on <= 1.25 and total steps on/off <= 1.25 (freezing delays batch
+  work, it never drops it).
+
+Three seeds run; the first is the gated headline, the rest guard
+against a seed-lucky controller. Writes ``BENCH_fig23.json`` for the
+trajectory gate.
+"""
+import json
+from pathlib import Path
+
+import jax
+
+from benchmarks.common import stamp
+from repro.configs import get_reduced
+from repro.core.characterization import Record
+from repro.models import init_params
+from repro.models.layers import RuntimeCfg
+from repro.runtime import workload as wl
+from repro.runtime.controller import ControllerSpec
+from repro.runtime.server import PartitionSpec, ServingRuntime, ServingSpec
+
+RT = RuntimeCfg(ssm_chunk=16)
+SLOTS = 2
+MAX_LEN = 64
+SEEDS = (7, 3, 11)                   # first seed is the gated headline
+LAT = "tenant2"                      # the latency-class rank (unpopular)
+
+CONTROLLER = ControllerSpec(interval=2, low=0.9, high=0.97, hold=4)
+
+BENCH_PATH = Path(__file__).resolve().parent.parent / "BENCH_fig23.json"
+
+
+def _workload(seed: int) -> wl.WorkloadSpec:
+    """Two Zipf-head batch tenants flooding long outputs in bursts; one
+    tail latency tenant answering short under a 20-step turnaround SLO.
+    The target leaves slack for preempt-by-drain: worst-case slot drain
+    (12 tokens) + short decode (5) fits inside 20 steps."""
+    return wl.WorkloadSpec(
+        tenants=3, zipf_s=1.1, arrival="bursty", rate=1.0,
+        burst_factor=3.0, burst_len=6, steps=40,
+        prompt_len=(4, 8), max_new=(8, 12),
+        max_new_overrides=(None, None, (3, 5)),
+        slos=("batch", "batch", "latency:20"), seed=seed)
+
+
+def _run_arm(params, cfg, trace, controller):
+    spec = ServingSpec(
+        partitions=(PartitionSpec(admission="fifo"),),
+        batch_slots=SLOTS, max_len=MAX_LEN, controller=controller)
+    runtime = ServingRuntime(params, cfg, spec, rt=RT)
+    done = wl.run_trace(runtime, trace)
+    rep = runtime.report()
+    rows = {t.tenant_id: t for t in rep.tenants}
+    batch_tokens = sum(t.tokens_out for t in rep.tenants
+                      if t.tenant_id != LAT)
+    summary = {
+        "steps": rep.steps,
+        "tokens": rep.tokens_out,
+        "latency_attainment": rows[LAT].slo_attainment,
+        "latency_mean_turnaround": round(
+            rows[LAT].mean_turnaround_steps, 3),
+        "batch_tokens": batch_tokens,
+        "batch_tok_per_step": round(batch_tokens / max(1, rep.steps), 4),
+        "fairness": round(rep.fairness, 4),
+        "wall_s": round(rep.wall_s, 4),
+    }
+    if runtime.controller is not None:
+        summary["controller"] = {
+            "checks": runtime.controller.checks,
+            "actions": runtime.controller.counts(),
+            "ledger": [a.to_dict() for a in runtime.controller.actions],
+        }
+    return summary, wl.tokens_by_uid(done)
+
+
+def run():
+    cfg = get_reduced("llama3-8b")
+    params = init_params(jax.random.PRNGKey(0), cfg)
+
+    seeds = {}
+    for seed in SEEDS:
+        trace = wl.generate(_workload(seed))
+        off, toks_off = _run_arm(params, cfg, trace, None)
+        on, toks_on = _run_arm(params, cfg, trace, CONTROLLER)
+
+        # The controller must never change WHAT gets decoded — only
+        # when. Greedy tokens per uid are the equality unit.
+        assert toks_on == toks_off, \
+            f"seed {seed}: controller changed committed tokens"
+        att_off = off["latency_attainment"]
+        att_on = on["latency_attainment"]
+        assert att_off is not None and att_off < 0.7, \
+            f"seed {seed}: off-arm attainment {att_off} not < 0.7 — " \
+            "the workload no longer starves the latency tenant"
+        assert att_on is not None and att_on >= 0.95, \
+            f"seed {seed}: on-arm attainment {att_on} < 0.95 — " \
+            "the controller failed to recover the latency class"
+        batch_cost = (off["batch_tok_per_step"]
+                      / max(on["batch_tok_per_step"], 1e-9))
+        step_cost = on["steps"] / max(1, off["steps"])
+        assert batch_cost <= 1.25 and step_cost <= 1.25, \
+            f"seed {seed}: batch-class cost unbounded (tok/step ratio " \
+            f"{batch_cost:.3f}, step ratio {step_cost:.3f})"
+        acts = on["controller"]["actions"]
+        assert acts["freeze"] >= 1 and acts["thaw"] == acts["freeze"], \
+            f"seed {seed}: controller ledger unbalanced ({acts})"
+        seeds[f"seed{seed}"] = {
+            "off": off, "on": on, "tokens_equal": 1,
+            "batch_cost": round(batch_cost, 4),
+            "step_cost": round(step_cost, 4),
+        }
+
+    head = seeds[f"seed{SEEDS[0]}"]
+    summary = {
+        "figure": "fig23_slo_control",
+        "workload": _workload(SEEDS[0]).to_dict(),
+        "controller": CONTROLLER.to_dict(),
+        "seeds": seeds,
+        "attainment_off": head["off"]["latency_attainment"],
+        "attainment_on": head["on"]["latency_attainment"],
+        "batch_cost": head["batch_cost"],
+        "step_cost": head["step_cost"],
+        "controller_actions": sum(
+            head["on"]["controller"]["actions"].values()),
+        "tokens_equal": 1,
+    }
+    stamp(summary, "fig23_slo_control")
+    BENCH_PATH.write_text(json.dumps(summary, indent=2) + "\n")
+
+    out = []
+    for name, s in seeds.items():
+        for arm in ("off", "on"):
+            a = s[arm]
+            out.append(Record(
+                name=f"fig23/slo_control/{name}/{arm}",
+                us_per_call=a["wall_s"] * 1e6,
+                derived={"steps": a["steps"],
+                         "latency_attainment": a["latency_attainment"],
+                         "batch_tok_per_step": a["batch_tok_per_step"]}))
+    out.append(Record(
+        name="fig23/equality", us_per_call=0.0,
+        derived={"tokens_equal": 1,
+                 "attainment_off": summary["attainment_off"],
+                 "attainment_on": summary["attainment_on"],
+                 "batch_cost": summary["batch_cost"]}))
+    return out

@@ -40,6 +40,7 @@ MODULES = [
     "fig20_paged_serving",
     "fig21_async_overlap",
     "fig22_speculative",
+    "fig23_slo_control",
     "roofline_report",
 ]
 

@@ -184,6 +184,25 @@ FIGURE_METRICS: Dict[str, Tuple[Metric, ...]] = {
         Metric("fig22_hostile_acceptance_rate",
                path="hostile_k4_fp8.acceptance_rate", gate=False),
     ),
+    # fig23: the SLO closed loop. Attainment on both arms is a
+    # deterministic step-domain quantity (seeded workload, lockstep
+    # steps), so the recovery claim gates tight; the off-arm collapse
+    # gates in the "lower is better" direction (a rising off-arm means
+    # the workload stopped starving the latency tenant and the figure
+    # no longer demonstrates anything); batch cost must stay bounded.
+    "fig23_slo_control": (
+        Metric("tokens_equal", tol=0.0),
+        Metric("attainment_on", tol=0.02),
+        Metric("attainment_off", direction="lower", tol=0.5),
+        Metric("fig23_batch_cost", path="batch_cost",
+               direction="lower", tol=0.15),
+        Metric("fig23_step_cost", path="step_cost",
+               direction="lower", tol=0.15),
+        Metric("fig23_controller_actions", path="controller_actions",
+               gate=False),
+        Metric("fig23_batch_tok_per_step",
+               path="seeds.seed7.on.batch_tok_per_step", tol=0.10),
+    ),
 }
 
 

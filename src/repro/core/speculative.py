@@ -75,12 +75,20 @@ class SpecDecodeSpec:
     interval: int = 8
     grow_above: float = 0.7
     shrink_below: float = 0.3
+    # Re-probe: after a tenant has sat at the k=1 floor for this many
+    # consecutive recalcs, its desired depth retries 2 so fresh
+    # acceptance evidence can flow (with drafting off the EMA never
+    # updates). 0 (the default) keeps the floor sticky — the pre-knob
+    # behavior, test-pinned.
+    reprobe_interval: int = 0
 
     def __post_init__(self):
         if self.k < 1:
             raise ValueError(f"speculative k must be >= 1, got {self.k}")
         if self.interval <= 0:
             raise ValueError("adaptive interval must be positive")
+        if self.reprobe_interval < 0:
+            raise ValueError("reprobe_interval must be >= 0")
         if not (0.0 < self.ema_alpha <= 1.0):
             raise ValueError("ema_alpha must be in (0, 1]")
         if not (0.0 <= self.shrink_below <= self.grow_above <= 1.0):
@@ -209,7 +217,11 @@ class AdaptiveK:
     path). With drafting off no new acceptance evidence arrives, so the
     floor is sticky until a tenant's recorded EMA decays out — by design:
     re-probing costs exact work, and a deployment that wants the probe
-    back simply re-admits speculation via the spec.
+    back simply re-admits speculation via the spec. The
+    ``spec.reprobe_interval`` knob softens this: a tenant parked at the
+    floor for that many consecutive recalcs gets its desired depth bumped
+    back to 2 for one probe — sustained rejection sends it straight back
+    down, while a workload whose acceptance recovered climbs out.
     """
 
     def __init__(self, spec: SpecDecodeSpec):
@@ -220,6 +232,8 @@ class AdaptiveK:
         self.k = spec.k
         self.steps = 0
         self.recalcs = 0
+        self.reprobes = 0
+        self._parked: Dict[str, int] = {}    # consecutive recalcs at floor
 
     def observe(self, tenant: str, drafted: int, accepted: int) -> None:
         """One tenant-step acceptance sample (``accepted`` of ``drafted``
@@ -243,6 +257,15 @@ class AdaptiveK:
                     d = min(self.max_k, d + 1)
                 elif r <= self.spec.shrink_below:
                     d = max(1, d - 1)
+                if d == 1 and self.spec.reprobe_interval > 0:
+                    parked = self._parked.get(tenant, 0) + 1
+                    if parked >= self.spec.reprobe_interval:
+                        d = min(2, self.max_k)
+                        self.reprobes += 1
+                        parked = 0
+                    self._parked[tenant] = parked
+                else:
+                    self._parked[tenant] = 0
                 self.desired[tenant] = d
             self.k = min(self.desired.values())
         return self.k
@@ -252,5 +275,6 @@ class AdaptiveK:
         stops constraining the batch-wide minimum."""
         self.ema.pop(tenant, None)
         self.desired.pop(tenant, None)
+        self._parked.pop(tenant, None)
         if self.desired:
             self.k = min(self.desired.values())

@@ -55,7 +55,13 @@ def build_spec(args, policy):
         page_size=getattr(args, "page_size", 16),
         pages=getattr(args, "pages", None),
         overlap=not getattr(args, "no_overlap", False),
-        metrics=getattr(args, "metrics_out", None) is not None)
+        metrics=getattr(args, "metrics_out", None) is not None,
+        controller=_parse_controller(getattr(args, "controller", None)))
+
+
+def _parse_controller(arg):
+    from repro.runtime.controller import ControllerSpec
+    return ControllerSpec.parse(arg)
 
 
 def main():
@@ -139,6 +145,18 @@ def main():
                     help="load the persistent autotune artifact "
                          "(launch/profile.py) and resolve policies from "
                          "calibrated thresholds")
+    ap.add_argument("--controller", default=None, nargs="?", const="on",
+                    metavar="SPEC",
+                    help="SLO closed loop (runtime/controller.py): bare "
+                         "flag for defaults, or 'interval=2,low=0.85,"
+                         "hold=4' knobs; freezes batch-class tenants / "
+                         "boosts slot caps while a latency-class tenant "
+                         "misses its SLO")
+    ap.add_argument("--workload", default=None, metavar="TRACE",
+                    help="replay a WorkloadTrace JSON (launch/loadgen.py "
+                         "--save-trace) through the runtime instead of "
+                         "the synthetic --requests stream; tenants and "
+                         "SLOs come from the trace spec")
     args = ap.parse_args()
 
     from repro.configs import get_arch, get_reduced
@@ -183,6 +201,9 @@ def main():
               f"migration={'on' if spec.migration.enabled else 'off'})")
         if args.metrics_out and not spec.metrics:
             spec = dataclasses.replace(spec, metrics=True)
+        if args.controller:
+            spec = dataclasses.replace(
+                spec, controller=_parse_controller(args.controller))
     else:
         spec = build_spec(args, policy)
     if args.save_spec:
@@ -200,7 +221,8 @@ def main():
                                 max_new=args.max_new))
 
     use_runtime = (args.spec is not None or spec.n_partitions > 1
-                   or spec.migration.enabled)
+                   or spec.migration.enabled or args.workload is not None
+                   or args.controller is not None)
     if use_runtime:
         # the serving control plane: one runtime from one spec — per-
         # partition policies, routed tenants, optional live migration
@@ -212,16 +234,32 @@ def main():
         # resolution, sparse24 pre-pack, cache alloc) must not pollute
         # the reported serving tok/s
         t0 = time.time()
-        tenant_ids = [t.id for t in spec.tenants]
-        if not tenant_ids:
-            tenant_ids = [f"tenant{i}" for i in range(max(args.tenants, 1))]
-            for tid in tenant_ids:
-                part = runtime.add_tenant(tid, slo=args.slo)
-                print(f"[serve] {tid} -> partition {part} "
-                      f"({spec.placement})")
-        for uid, req in enumerate(requests):
-            runtime.submit(tenant_ids[uid % len(tenant_ids)], req)
-        done = runtime.drain()
+        if args.workload:
+            from repro.runtime.workload import WorkloadTrace, run_trace
+            wtrace = WorkloadTrace.load(args.workload)
+            print(f"[serve] workload trace: {args.workload} "
+                  f"({len(wtrace.events)} arrivals / "
+                  f"{len(wtrace.tenant_ids())} tenants over "
+                  f"{wtrace.steps} steps)")
+            done = run_trace(runtime, wtrace)
+            args.requests = len(wtrace.events)
+        else:
+            tenant_ids = [t.id for t in spec.tenants]
+            if not tenant_ids:
+                tenant_ids = [f"tenant{i}"
+                              for i in range(max(args.tenants, 1))]
+                for tid in tenant_ids:
+                    part = runtime.add_tenant(tid, slo=args.slo)
+                    print(f"[serve] {tid} -> partition {part} "
+                          f"({spec.placement})")
+            for uid, req in enumerate(requests):
+                runtime.submit(tenant_ids[uid % len(tenant_ids)], req)
+            done = runtime.drain()
+        if runtime.controller is not None:
+            counts = runtime.controller.counts()
+            print(f"[serve] controller: checks "
+                  f"{runtime.controller.checks} · "
+                  + ", ".join(f"{a}:{n}" for a, n in counts.items()))
         print(runtime.report().summary())
         if args.telemetry:
             print(runtime.merged_tracer().summary())

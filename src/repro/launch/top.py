@@ -80,8 +80,9 @@ def render(runtime, report=None, *, clock: Optional[float] = None) -> str:
     lines.append("")
 
     # -- tenants ------------------------------------------------------------
+    ctrl = getattr(runtime, "controller", None)
     lines.append("  TENANT      P   DONE/SUB    TOK   TURN   SPEC"
-                 "          SLO                    ATTAIN")
+                 "          SLO                    ATTAIN       CTRL")
     for t in rep.tenants:
         slo = t.slo or "-"
         att_bar = _bar(t.slo_attainment or 0.0, 10) if t.slo else "-" * 10
@@ -92,11 +93,22 @@ def render(runtime, report=None, *, clock: Optional[float] = None) -> str:
             spec = f"{t.effective_tokens_per_step:4.2f}x/{acc}"
         else:
             spec = "-"
+        # SLO trend arrow from the controller's recent-attainment delta:
+        # ^ improving, v degrading, = steady, blank when untracked.
+        trend = ctrl.trend_arrow(t.tenant_id) if ctrl is not None else ""
         lines.append(
             f"  {t.tenant_id:<11} {t.partition:>1}  "
             f"{t.completed:>4}/{t.submitted:<4}  {t.tokens_out:>5}  "
             f"{t.mean_turnaround_steps:5.1f}   {spec:<12}  {slo:<21} "
-            f"{_fmt_att(t.slo_attainment)} [{att_bar}]{mig}")
+            f"{_fmt_att(t.slo_attainment)} [{att_bar}] {trend:<2}{mig}")
+
+    # -- SLO controller ------------------------------------------------------
+    if ctrl is not None:
+        counts = ctrl.counts()
+        acted = ", ".join(f"{a}:{n}" for a, n in counts.items())
+        lines.append("")
+        lines.append(f"  CTRL  checks {ctrl.checks} · frozen now "
+                     f"{ctrl.frozen_now()} · {acted}")
 
     # -- metrics registry ---------------------------------------------------
     if runtime.metrics is not None:

@@ -365,6 +365,9 @@ class MetricsSink:
             PREFIX + "spec_committed_tokens",
             "tokens committed per speculative step per tenant",
             buckets=SPEC_COMMIT_BUCKETS)
+        self.controller_actions = r.counter(
+            PREFIX + "controller_actions_total",
+            "SLO-controller actions (freeze/thaw/boost/unboost) by kind")
         self._group_walls: Dict[int, List[float]] = {}
         self._glock = threading.Lock()
 
@@ -413,6 +416,10 @@ class MetricsSink:
             committed = ev.meta.get("committed")
             if committed:
                 self.spec_committed.observe(float(committed), tenant=tenant)
+        elif ev.kind == "controller":
+            self.controller_actions.inc(
+                action=str(ev.meta.get("action", "?")),
+                tenant=ev.tenant or "?")
         elif ev.kind == "paging":
             if ev.meta.get("phase") == "page_oom":
                 self.page_oom.inc(partition=part)

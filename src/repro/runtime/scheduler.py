@@ -619,6 +619,10 @@ class StreamScheduler:
         self._rr_next = 0
         self.step_count = 0
         self.admitted_order: List[str] = []   # tenant id per admission
+        # Per-tenant slot-cap overrides (tenant_id -> cap). Wins over the
+        # QuotaPolicy: the SLO controller boosts a missing latency-class
+        # tenant to the full budget for the enforcement episode.
+        self.cap_overrides: Dict[str, int] = {}
         self._default_cap: Optional[int] = None
         self._t0: Optional[float] = None
         self._wall_s = 0.0
@@ -700,6 +704,9 @@ class StreamScheduler:
         return self._default_cap
 
     def _slot_cap(self, t: Tenant) -> int:
+        override = self.cap_overrides.get(t.tenant_id)
+        if override is not None:
+            return max(1, override)
         return self.quota.slot_cap(self, t)
 
     # -- admission policies -------------------------------------------------

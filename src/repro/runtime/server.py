@@ -50,6 +50,7 @@ from repro.core import concurrency as cc
 from repro.core import execution as ex
 from repro.core.speculative import SpecDecodeSpec
 from repro.runtime import telemetry
+from repro.runtime.controller import ControllerSpec, SLOController
 from repro.runtime.scheduler import (
     ADMISSION_POLICIES, QuotaPolicy, SLO, SchedulerReport, StreamScheduler,
     Tenant, TenantReport, build_tenant_report, request_cost)
@@ -122,6 +123,11 @@ def _policy_str(policy) -> Optional[str]:
 
 def _spec_dict(speculative) -> Optional[Dict[str, Any]]:
     spec = SpecDecodeSpec.from_any(speculative)
+    return spec.to_dict() if spec is not None else None
+
+
+def _controller_dict(controller) -> Optional[Dict[str, Any]]:
+    spec = ControllerSpec.from_any(controller)
     return spec.to_dict() if spec is not None else None
 
 
@@ -261,6 +267,12 @@ class ServingSpec:
     # tracer; the registry is reachable as ``runtime.metrics`` and every
     # ``report()`` folds SLO attainment / fairness / occupancy gauges in.
     metrics: bool = False
+    # SLO closed loop (runtime/controller.ControllerSpec as None / bool /
+    # dict / instance). When set, the runtime runs an SLOController every
+    # ``interval`` global steps that freezes batch-class tenants and
+    # boosts slot caps while a latency-class tenant misses its SLO.
+    # None (the default) is byte-identical to the pre-controller runtime.
+    controller: Any = None
 
     def __post_init__(self):
         if not self.partitions:
@@ -289,6 +301,7 @@ class ServingSpec:
                     f"temperature={self.temperature} cannot enable "
                     "speculation (drop the speculative field or set "
                     "temperature=0)")
+        ControllerSpec.from_any(self.controller)   # validate now
         ids = [t.id for t in self.tenants]
         if len(set(ids)) != len(ids):
             raise ValueError("duplicate tenant ids in spec")
@@ -319,6 +332,7 @@ class ServingSpec:
             "speculative": _spec_dict(self.speculative),
             "overlap": self.overlap,
             "metrics": self.metrics,
+            "controller": _controller_dict(self.controller),
         }
 
     @classmethod
@@ -556,6 +570,11 @@ class ServingRuntime:
             self.metrics = MetricsRegistry()
             self.metrics_sink = MetricsSink(self.metrics).attach(
                 *self.tracers)
+        # SLO closed loop (runtime/controller.py): acts on attainment
+        # every ``interval`` steps. None → byte-identical legacy behavior.
+        cspec = ControllerSpec.from_any(spec.controller)
+        self.controller = (SLOController(cspec)
+                           if cspec is not None and cspec.enabled else None)
         for tspec in spec.tenants:
             self.add_tenant(tspec.id, weight=tspec.weight,
                             partition=tspec.partition, slo=tspec.slo)
@@ -709,6 +728,8 @@ class ServingRuntime:
         self._advance_migrations()
         if self.spec.migration.enabled:
             self._maybe_migrate()
+        if self.controller is not None:
+            self.controller.on_step(self)
         return done
 
     def _overlap_candidates(self) -> List[ex.OverlapCandidate]:

@@ -330,6 +330,75 @@ def test_adaptive_k_grows_and_shrinks():
     assert ak.k == 4
 
 
+def test_adaptive_floor_sticky_without_reprobe():
+    """Pin the pre-knob behavior: reprobe_interval=0 (the default) keeps
+    a floored tenant parked forever — with drafting off no acceptance
+    evidence arrives, and the EMA never moves."""
+    spec = SpecDecodeSpec(k=4, adaptive=True, interval=2, ema_alpha=1.0)
+    assert spec.reprobe_interval == 0
+    ak = AdaptiveK(spec)
+    for _ in range(8):
+        ak.observe("t", 3, 0)
+        ak.on_step()
+    assert ak.k == 1
+    # many evidence-free recalcs later: still parked
+    for _ in range(40):
+        ak.on_step()
+    assert ak.k == 1
+    assert ak.reprobes == 0
+
+
+def test_adaptive_reprobe_retries_the_floor():
+    """reprobe_interval=N: after N consecutive recalcs parked at k=1 the
+    desired depth retries 2. Recovered acceptance climbs back out;
+    sustained rejection falls straight back and re-probes periodically."""
+    spec = SpecDecodeSpec(k=4, adaptive=True, interval=2, ema_alpha=1.0,
+                          reprobe_interval=3)
+    ak = AdaptiveK(spec)
+    for _ in range(8):
+        ak.observe("t", 3, 0)
+        ak.on_step()
+    assert ak.k == 1
+    # evidence-free recalcs accumulate floor time until the re-probe
+    # lifts the depth back to 2 (and no further)
+    probes = 0
+    while ak.k == 1:
+        ak.on_step()
+        probes += 1
+        assert probes <= 2 * spec.interval * spec.reprobe_interval
+    assert ak.k == 2
+    assert ak.reprobes == 1
+    # the probe finds acceptance recovered -> climbs to max
+    for _ in range(8):
+        ak.observe("t", 3, 3)
+        ak.on_step()
+    assert ak.k == 4
+    # rejection parks it again... and the probe keeps coming back.
+    # (k may read 1 or 2 at any instant depending on the probe phase,
+    # but it never climbs while every draft is rejected)
+    reprobes_before = ak.reprobes
+    for _ in range(10):
+        ak.observe("t", 3, 0)
+        ak.on_step()
+    assert ak.k in (1, 2)
+    for _ in range(2 * spec.interval * spec.reprobe_interval):
+        ak.on_step()
+    assert ak.reprobes > reprobes_before
+
+
+def test_adaptive_reprobe_capped_by_max_k():
+    spec = SpecDecodeSpec(k=1, adaptive=True, interval=1, ema_alpha=1.0,
+                          reprobe_interval=1)
+    ak = AdaptiveK(spec)
+    ak.observe("t", 1, 0)
+    ak.ema["t"] = 0.0                   # force a floored record
+    for _ in range(5):
+        ak.on_step()
+    assert ak.k == 1                    # min(2, max_k=1) stays 1
+    with pytest.raises(ValueError):
+        SpecDecodeSpec(k=2, reprobe_interval=-1)
+
+
 def test_adaptive_session_actuates_depth(model):
     cfg, _ = model
     sess = _session(model, slots=1,

@@ -1,0 +1,251 @@
+"""The workload plane: seed-deterministic generation, JSON trace
+round-trip, and bit-for-bit replay through the serving runtime.
+
+The contracts under test (ISSUE 10 satellites):
+
+* same (spec, seed) ⇒ identical ``WorkloadTrace`` — the generator has
+  ONE documented sampling order and no hidden global state;
+* a trace survives JSON save/load exactly (events carry their prompts
+  inline, so replay is generator-independent);
+* replaying a saved trace through a fresh ``ServingRuntime`` reproduces
+  the generating run's committed tokens token-for-token;
+* the Zipf popularity law actually skews arrivals toward rank 0, and
+  the arrival modulations (bursty/diurnal) actually modulate.
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_reduced
+from repro.models import init_params
+from repro.models.layers import RuntimeCfg
+from repro.runtime import workload as wl
+from repro.runtime.scheduler import StreamScheduler
+from repro.runtime.server import PartitionSpec, ServingRuntime, ServingSpec
+
+RT = RuntimeCfg(ssm_chunk=16)
+
+
+@pytest.fixture(scope="module")
+def model():
+    cfg = get_reduced("llama3-8b")
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    return cfg, params
+
+
+def _runtime(model, **kw):
+    cfg, params = model
+    spec = ServingSpec(partitions=(PartitionSpec(admission="fifo"),),
+                       batch_slots=2, max_len=64, **kw)
+    return ServingRuntime(params, cfg, spec, rt=RT)
+
+
+# ---------------------------------------------------------------------------
+# LengthDist / WorkloadSpec
+# ---------------------------------------------------------------------------
+
+def test_length_dist_forms_and_bounds():
+    assert wl.LengthDist.from_any(5) == wl.LengthDist(5, 5)
+    assert wl.LengthDist.from_any((3, 9)) == wl.LengthDist(3, 9)
+    assert wl.LengthDist.from_any({"lo": 2, "hi": 4}) == wl.LengthDist(2, 4)
+    d = wl.LengthDist(2, 4, long_lo=10, long_hi=12, long_frac=0.5)
+    rng = np.random.default_rng(0)
+    draws = {d.sample(rng) for _ in range(200)}
+    assert draws <= set(range(2, 5)) | set(range(10, 13))
+    assert draws & set(range(2, 5)) and draws & set(range(10, 13))
+    with pytest.raises(ValueError):
+        wl.LengthDist(0, 4)
+    with pytest.raises(ValueError):
+        wl.LengthDist(4, 2)
+    with pytest.raises(ValueError):
+        wl.LengthDist(2, 4, long_frac=0.5)      # missing long range
+
+
+def test_workload_spec_validation():
+    with pytest.raises(ValueError):
+        wl.WorkloadSpec(arrival="fractal")
+    with pytest.raises(ValueError):
+        wl.WorkloadSpec(tenants=0)
+    with pytest.raises(ValueError):
+        wl.WorkloadSpec(rate=0.0)
+    with pytest.raises(ValueError):
+        wl.WorkloadSpec(tenants=3, slos=("batch",))     # length mismatch
+    with pytest.raises(ValueError):
+        wl.WorkloadSpec(tenants=2, max_new_overrides=((3, 5),))
+    with pytest.raises(ValueError):
+        wl.WorkloadSpec.from_dict({"tenants": 2, "n_users": 1e6})
+
+
+def test_workload_spec_dict_round_trip():
+    spec = wl.WorkloadSpec(
+        tenants=3, zipf_s=1.3, arrival="diurnal", rate=2.0, period=32,
+        amplitude=0.5, steps=16, prompt_len=(2, 6),
+        max_new={"lo": 3, "hi": 5, "long_lo": 9, "long_hi": 12,
+                 "long_frac": 0.25},
+        max_new_overrides=(None, (2, 3), None),
+        slos=("batch", None, "latency:10"), weights=(1.0, 2.0, 1.0),
+        seed=42)
+    again = wl.WorkloadSpec.from_dict(spec.to_dict())
+    assert again == spec
+    assert again.to_dict() == spec.to_dict()
+
+
+def test_zipf_weights_skew():
+    w = wl.zipf_weights(8, 1.2)
+    assert w.shape == (8,)
+    assert abs(w.sum() - 1.0) < 1e-12
+    assert all(w[i] > w[i + 1] for i in range(7))
+    flat = wl.zipf_weights(8, 0.0)
+    assert np.allclose(flat, 1 / 8)
+
+
+# ---------------------------------------------------------------------------
+# generation determinism + distribution shape
+# ---------------------------------------------------------------------------
+
+def test_generate_deterministic():
+    spec = wl.WorkloadSpec(tenants=4, arrival="bursty", rate=1.5,
+                           steps=32, seed=9)
+    a, b = wl.generate(spec), wl.generate(spec)
+    assert a == b
+    assert a.events and a.events == b.events
+    # a different seed moves the trace
+    c = wl.generate(wl.WorkloadSpec(tenants=4, arrival="bursty",
+                                    rate=1.5, steps=32, seed=10))
+    assert c != a
+
+
+def test_generate_zipf_concentrates_head():
+    spec = wl.WorkloadSpec(tenants=4, zipf_s=1.5, rate=4.0, steps=64,
+                           seed=1)
+    per = wl.generate(spec).arrivals_per_tenant()
+    assert per["tenant0"] > per["tenant3"] * 2
+
+
+def test_generate_uids_sequential_and_steps_bounded():
+    spec = wl.WorkloadSpec(tenants=2, rate=2.0, steps=16, seed=3)
+    tr = wl.generate(spec)
+    assert [e.uid for e in tr.events] == list(range(len(tr.events)))
+    assert all(0 <= e.step < spec.steps for e in tr.events)
+    assert all(len(e.prompt) >= 1 for e in tr.events)
+    assert all(max(e.prompt) < spec.vocab for e in tr.events)
+
+
+def test_diurnal_modulates_arrivals():
+    spec = wl.WorkloadSpec(tenants=1, arrival="diurnal", rate=4.0,
+                           period=32, amplitude=0.9, steps=64, seed=5)
+    tr = wl.generate(spec)
+    # fold arrivals by phase: the peak half-cycle must out-arrive the
+    # trough half-cycle
+    peak = sum(1 for e in tr.events if (e.step % 32) < 16)
+    trough = len(tr.events) - peak
+    assert peak > trough
+
+
+def test_bursty_has_on_and_off_phases():
+    spec = wl.WorkloadSpec(tenants=1, arrival="bursty", rate=2.0,
+                           burst_factor=6.0, burst_len=8, steps=64,
+                           seed=2)
+    per_step = [0] * spec.steps
+    for e in wl.generate(spec).events:
+        per_step[e.step] += 1
+    # ON phases push well past the mean; OFF phases go quiet
+    assert max(per_step) >= 6
+    assert min(per_step) == 0
+
+
+# ---------------------------------------------------------------------------
+# trace JSON round-trip
+# ---------------------------------------------------------------------------
+
+def test_trace_json_round_trip(tmp_path):
+    spec = wl.WorkloadSpec(tenants=3, arrival="bursty", rate=1.0,
+                           steps=24, slos=("batch", "batch", "latency:9"),
+                           seed=11)
+    tr = wl.generate(spec)
+    path = tmp_path / "trace.json"
+    tr.save(path)
+    again = wl.WorkloadTrace.load(path)
+    assert again == tr
+    assert again.spec == spec
+    assert again.to_dict() == tr.to_dict()
+
+
+def test_trace_schema_guard():
+    with pytest.raises(ValueError):
+        wl.WorkloadTrace.from_dict({"schema": 99, "events": []})
+
+
+def test_specless_trace_steps_and_tenants():
+    ev = [wl.WorkloadEvent(step=4, tenant="b", uid=0, prompt=(1, 2),
+                           max_new=3),
+          wl.WorkloadEvent(step=7, tenant="a", uid=1, prompt=(3,),
+                           max_new=2)]
+    tr = wl.WorkloadTrace(events=ev)
+    assert tr.steps == 8
+    assert tr.tenant_ids() == ["b", "a"]          # discovery order
+    again = wl.WorkloadTrace.from_json(tr.to_json())
+    assert again == tr
+
+
+def test_event_requests_are_fresh():
+    ev = wl.WorkloadEvent(step=0, tenant="t", uid=7, prompt=(1, 2, 3),
+                          max_new=4)
+    r1, r2 = ev.to_request(), ev.to_request()
+    assert r1 is not r2
+    r1.out.append(99)
+    assert r2.out == []
+    assert r1.prompt.dtype == np.int32
+
+
+# ---------------------------------------------------------------------------
+# replay exactness through the runtime
+# ---------------------------------------------------------------------------
+
+def test_replay_reproduces_tokens(model, tmp_path):
+    """The tentpole exactness contract: generate → run → save; load →
+    fresh runtime → run; committed tokens match token-for-token."""
+    spec = wl.WorkloadSpec(tenants=3, zipf_s=1.2, arrival="bursty",
+                           rate=0.8, burst_len=4, steps=16,
+                           prompt_len=(3, 6), max_new=(3, 5),
+                           slos=("batch", "batch", "latency:12"), seed=21)
+    trace = wl.generate(spec)
+    done = wl.run_trace(_runtime(model), trace)
+    assert len(done) == len(trace.events)
+    tokens = wl.tokens_by_uid(done)
+
+    path = tmp_path / "w.json"
+    trace.save(path)
+    replayed = wl.WorkloadTrace.load(path)
+    done2 = wl.run_trace(_runtime(model), replayed)
+    assert wl.tokens_by_uid(done2) == tokens
+    assert wl.token_checksum(done2) == wl.token_checksum(done)
+    # submit steps follow the trace exactly
+    subs = {r.uid: r.submit_step for r in done2}
+    assert subs == {e.uid: e.step for e in trace.events}
+
+
+def test_run_trace_registers_slos_and_weights(model):
+    spec = wl.WorkloadSpec(tenants=2, rate=1.0, steps=8,
+                           slos=(None, "latency:6"), weights=(2.0, 1.0),
+                           seed=4)
+    runtime = _runtime(model)
+    wl.run_trace(runtime, wl.generate(spec), drain=True)
+    sched = runtime.schedulers[0]
+    assert sched.tenants["tenant0"].slo is None
+    assert sched.tenants["tenant1"].slo.kind == "latency"
+    assert sched.tenants["tenant0"].weight == 2.0
+
+
+def test_run_trace_drives_stream_scheduler(model):
+    """run_trace is facade-duck-typed: a bare StreamScheduler (no
+    runtime) accepts the same trace."""
+    cfg, params = model
+    from repro.runtime.serve_loop import ServeSession
+    sess = ServeSession(params, cfg, batch_slots=2, max_len=64, rt=RT)
+    sched = StreamScheduler(sess, admission="fifo")
+    spec = wl.WorkloadSpec(tenants=2, rate=0.8, steps=8, seed=6,
+                           prompt_len=(3, 5), max_new=(3, 4))
+    trace = wl.generate(spec)
+    done = wl.run_trace(sched, trace)
+    assert len(done) == len(trace.events)
